@@ -1,0 +1,96 @@
+"""TPU-native schedule flexibility — the FlexNN thesis on v5e constants.
+
+For every matmul site of every assigned architecture × shape, compare the
+HBM traffic of the *per-site optimal* stationarity/blocking (the FlexNN
+schedule selector re-targeted at HBM→VMEM→MXU, `select_matmul_schedule`)
+against each fixed-stationarity policy — the §II-A argument, reproduced on
+the TPU memory hierarchy: no fixed dataflow is optimal for every site, and
+per-site flexibility strictly dominates.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.core.descriptors import matmul_sites
+from repro.core.scheduler import TPU_V5E, MatmulSchedule, _mm_hbm_bytes, \
+    select_matmul_schedule
+
+STATS = ("output", "weight", "input")
+
+
+def _best_fixed_bytes(m: int, n: int, k: int, stat: str) -> float:
+    """Best blocking under one fixed stationarity (the fixed-dataflow twin
+    of select_matmul_schedule)."""
+    best = None
+    for bm in (128, 256, 512, 1024):
+        for bn in (128, 256, 512, 1024):
+            for bk in (128, 256, 512, 1024):
+                cbm, cbn, cbk = min(bm, m), min(bn, n), min(bk, k)
+                vmem = (cbm * cbk + cbk * cbn) * 2 * 2 + cbm * cbn * 4
+                if vmem > TPU_V5E.vmem_bytes:
+                    continue
+                b = _mm_hbm_bytes(m, n, k, cbm, cbn, cbk, stat, 2)
+                if best is None or b < best:
+                    best = b
+    return best
+
+
+def run(verbose: bool = True) -> Dict[str, object]:
+    totals = {s: 0.0 for s in STATS}
+    total_flex = 0.0
+    wins = Counter()
+    n_sites = 0
+    worst_ratio = {s: 1.0 for s in STATS}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if not shape_applicable(cfg, shape):
+                continue
+            for site, m, n, k in matmul_sites(cfg, shape, model_shards=16):
+                n_sites += 1
+                sched = select_matmul_schedule(m, n, k)
+                total_flex += sched.hbm_bytes
+                wins[sched.stationarity] += 1
+                for s in STATS:
+                    b = _best_fixed_bytes(m, n, k, s)
+                    totals[s] += b
+                    worst_ratio[s] = max(worst_ratio[s],
+                                         b / max(sched.hbm_bytes, 1.0))
+    overhead = {s: totals[s] / total_flex for s in STATS}
+    results = {"n_sites": n_sites, "wins": dict(wins),
+               "fixed_overhead": overhead, "worst_ratio": worst_ratio}
+    if verbose:
+        print(f"{n_sites} matmul sites across "
+              f"{len(ARCH_IDS)} archs × shapes (TP=16 per-device views)")
+        print(f"stationarity wins: {dict(wins)}")
+        for s in STATS:
+            print(f"  always-{s:<6}: {overhead[s]:.3f}x the flexible HBM "
+                  f"traffic (worst site {worst_ratio[s]:.1f}x)")
+    return results
+
+
+def validate(results: Dict[str, object]) -> List[str]:
+    failures = []
+    # flexibility must dominate every fixed policy
+    for s, ov in results["fixed_overhead"].items():
+        if ov < 1.0 - 1e-9:
+            failures.append(f"fixed {s} beats flexible ({ov:.3f}x) — "
+                            "selector is not optimal")
+    # and no single stationarity should win everywhere (the paper's point)
+    wins = results["wins"]
+    if len([s for s in wins.values() if s > 0]) < 2:
+        failures.append(f"one stationarity won every site: {wins}")
+    # some site must pay a real penalty under a fixed policy
+    if max(results["worst_ratio"].values()) < 1.5:
+        failures.append("no site shows ≥1.5x fixed-dataflow penalty")
+    return failures
+
+
+if __name__ == "__main__":
+    res = run()
+    fails = validate(res)
+    print("VALIDATION:", "PASS" if not fails else fails)

@@ -1,0 +1,100 @@
+"""Generate the EXPERIMENTS.md tables from the dry-run/roofline artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = "artifacts"
+
+
+def _fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for p in sorted(glob.glob(f"{ART}/dryrun/{mesh}/*.json")):
+        d = json.load(open(p))
+        if not d.get("ok"):
+            rows.append(f"| {d['arch']} | {d['shape']} | FAILED | | | | | |")
+            continue
+        c = d["collectives"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['n_micro']} "
+            f"| {_fmt_bytes(d['live_bytes_per_device'])} "
+            f"| {_fmt_bytes(d['live_bytes_tpu_est'])} "
+            f"| {'✓' if d['fits_hbm'] else '✗'} "
+            f"| {d['cost']['flops']:.2e} "
+            f"| {_fmt_bytes(c['wire_bytes'])} "
+            f"| {c['count']} |")
+    hdr = (f"\n### {mesh} mesh "
+           f"({'(2,16,16)=512' if mesh == 'multi' else '(16,16)=256'} chips)"
+           "\n\n| arch | shape | n_micro | live GiB/dev (raw CPU) "
+           "| live GiB/dev (TPU est) | fits 16 GiB | FLOPs/dev "
+           "| coll wire GiB/dev | coll ops |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def roofline_table() -> str:
+    rows = []
+    for p in sorted(glob.glob(f"{ART}/roofline/*.json")):
+        if "@" in os.path.basename(p).replace(".json", "").split("@", 2)[-1]:
+            pass
+        d = json.load(open(p))
+        if d.get("tag"):
+            continue              # hillclimb variants listed in §Perf
+        t = d["terms"]
+        dom = {"compute_s": "compute", "memory_s": "memory",
+               "collective_s": "collective"}[d["dominant"]]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {t['compute_s']*1e3:.1f} | {t['memory_s']*1e3:.1f} "
+            f"| {t['collective_s']*1e3:.1f} | **{dom}** "
+            f"| {d['model_flops_per_device']:.2e} "
+            f"| {d['useful_flops_ratio']:.2f} "
+            f"| {d['roofline_fraction']:.3f} |")
+    hdr = ("\n| arch | shape | compute ms | memory ms | collective ms "
+           "| bottleneck | MODEL_FLOPS/dev | useful ratio "
+           "| roofline fraction |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def perf_table() -> str:
+    rows = []
+    for p in sorted(glob.glob(f"{ART}/roofline/*@*@*.json")):
+        d = json.load(open(p))
+        t = d["terms"]
+        rows.append(
+            f"| {d['arch']}@{d['shape']} | {d['tag']} "
+            f"| {t['compute_s']*1e3:.1f} | {t['memory_s']*1e3:.1f} "
+            f"| {t['collective_s']*1e3:.1f} | {d['dominant'].replace('_s','')} "
+            f"| {d['roofline_fraction']:.3f} |")
+    hdr = ("\n| cell | variant | compute ms | memory ms | collective ms "
+           "| bottleneck | roofline fraction |\n"
+           "|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=["dryrun", "roofline", "perf"],
+                    default=None)
+    args = ap.parse_args()
+    if args.section in (None, "dryrun"):
+        print(dryrun_table("single"))
+        print(dryrun_table("multi"))
+    if args.section in (None, "roofline"):
+        print(roofline_table())
+    if args.section in (None, "perf"):
+        print(perf_table())
+
+
+if __name__ == "__main__":
+    main()

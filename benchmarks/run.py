@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--suite NAME]
+
+Suites (DESIGN.md §6 experiment index):
+    energy_vs_fixed — Fig 16: FlexNN vs Eyeriss-RS / TPU-NLR layer energy
+    sparsity        — Figs 17–19: two-sided speedups + energy efficiency
+    flextree        — §III-B: configurable-depth psum tree
+    kernels         — Pallas kernel sweeps + CSB skip-rate scaling
+
+Each suite prints its metrics and a VALIDATION verdict against the paper's
+claim bands; the process exits non-zero if any suite fails validation.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+SUITES = ("energy_vs_fixed", "sparsity", "flextree", "kernels",
+          "tpu_schedules")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=SUITES, default=None)
+    args = ap.parse_args()
+    suites = [args.suite] if args.suite else list(SUITES)
+
+    all_failures = []
+    for name in suites:
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        t0 = time.time()
+        if name == "energy_vs_fixed":
+            from benchmarks import bench_energy_vs_fixed as mod
+        elif name == "sparsity":
+            from benchmarks import bench_sparsity as mod
+        elif name == "flextree":
+            from benchmarks import bench_flextree as mod
+        elif name == "tpu_schedules":
+            from benchmarks import bench_tpu_schedules as mod
+        else:
+            from benchmarks import bench_kernels as mod
+        results = mod.run(verbose=True)
+        fails = mod.validate(results)
+        dt = time.time() - t0
+        print(f"[{name}] {'PASS' if not fails else 'FAIL'} ({dt:.0f}s)")
+        for f in fails:
+            print(f"  ! {f}")
+        all_failures += [f"{name}: {f}" for f in fails]
+
+    print("\n" + "=" * 64)
+    if all_failures:
+        print(f"{len(all_failures)} validation failure(s)")
+        sys.exit(1)
+    print("ALL BENCHMARK VALIDATIONS PASS")
+
+
+if __name__ == "__main__":
+    main()

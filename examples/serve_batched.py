@@ -1,0 +1,48 @@
+"""Batched serving example (deliverable (b)): continuous batching with slot
+reuse over a reduced gemma-2b — requests arrive mid-flight, finished slots
+are re-admitted from the queue, greedy tokens stream back per request.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.models import model as model_lib
+from repro.serve.engine import ServeEngine
+
+
+def main() -> None:
+    cfg = get_smoke_config("gemma-2b")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.float32)
+    engine = ServeEngine(cfg, params, n_slots=4, max_seq=96)
+    rng = np.random.default_rng(0)
+
+    # first wave
+    for i in range(4):
+        engine.submit(rng.integers(0, cfg.vocab, size=8), max_new=12)
+    t0 = time.time()
+    for step in range(6):
+        out = engine.step()
+        print(f"step {step}: emitted {len(out)} tokens "
+              f"{dict(list(out.items())[:3])}")
+
+    # second wave arrives while the first is decoding
+    for i in range(4):
+        engine.submit(rng.integers(0, cfg.vocab, size=8), max_new=12)
+    results = engine.run_until_drained()
+    dt = time.time() - t0
+    total = sum(len(v) for v in results.values())
+    print(f"\nserved {len(results)} requests / {total} tokens "
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s on CPU)")
+    for uid, toks in sorted(results.items()):
+        print(f"  req {uid}: {len(toks)} tokens, first 6 = {toks[:6]}")
+    assert len(results) == 8 and all(len(v) == 12 for v in results.values())
+
+
+if __name__ == "__main__":
+    main()

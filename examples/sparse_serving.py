@@ -1,0 +1,66 @@
+"""Two-sided sparse inference (deliverable (b), beyond-paper integration):
+magnitude-prune a smoke LM's MLP weights block-wise, build the CSB
+block-sparse metadata from weights × *runtime* activation bitmaps, run the
+MLP through the two-sided kernel, and report accuracy + skip economics —
+FlexNN §III-D end-to-end at tile granularity.
+
+Run:  PYTHONPATH=src python examples/sparse_serving.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.core.sparsity import (block_bitmap, build_block_sparse_meta,
+                                 prune_magnitude, zvc_compressed_bytes)
+from repro.kernels.block_sparse import block_sparse_matmul
+from repro.kernels.ref import block_sparse_matmul_ref
+
+
+def main() -> None:
+    cfg = get_smoke_config("yi-9b")
+    rng = np.random.default_rng(0)
+    bm = bk = bn = 16
+    d, f = cfg.d_model, cfg.d_ff
+
+    # --- weight side: block-magnitude pruning (NNCF stand-in) --------------
+    w_in = prune_magnitude(rng.normal(size=(d, f)).astype(np.float32) * 0.05,
+                           0.6, block=(bk, bn))
+    w_bitmap = block_bitmap(w_in, bk, bn)
+    print(f"w_in ({d}x{f}): 60% block-pruned, "
+          f"{100*(1-w_bitmap.mean()):.0f}% blocks dead, "
+          f"ZVC at rest {zvc_compressed_bytes(w_in, 4)/w_in.nbytes:.2f}x")
+
+    # --- activation side: runtime ReLU-style sparsity ----------------------
+    t = 64
+    x = rng.normal(size=(t, d)).astype(np.float32)
+    x = np.where(x > 0.3, x, 0.0)                  # ~38% live (ReLU-ish)
+    a_bitmap = block_bitmap(x, bm, bk)
+    print(f"activations ({t}x{d}): {100*(x == 0).mean():.0f}% zero "
+          f"element-wise, {100*(1-a_bitmap.mean()):.0f}% blocks dead")
+
+    # --- combined (CSB) dispatch -------------------------------------------
+    meta = build_block_sparse_meta(x, w_in, bm, bk, bn,
+                                   a_bitmap=a_bitmap, b_bitmap=w_bitmap)
+    out = block_sparse_matmul(jnp.asarray(x), jnp.asarray(w_in), meta,
+                              interpret=True)
+    ref = block_sparse_matmul_ref(jnp.asarray(x), jnp.asarray(w_in), meta)
+    err = float(jnp.abs(out - ref).max())
+    exact = float(jnp.abs(out - jnp.asarray(x @ w_in)).max())
+    print(f"\nCSB skip fraction: {meta.skip_fraction*100:.1f}% of block MACs "
+          f"never fetched or multiplied")
+    print(f"kernel vs skip-semantics oracle: {err:.2e} (must be ~0)")
+    print(f"kernel vs dense product:        {exact:.2e} "
+          f"(exact — bitmaps derived from the data)")
+    assert err < 1e-4 and exact < 1e-4
+    # cycle-model economics at the paper's element granularity
+    from repro.core.sparsity import simulate_pe_cycles
+    dense_c = simulate_pe_cycles(256, 16, 64, 1.0)
+    sparse_c = simulate_pe_cycles(256, 16, 64,
+                                  float((x != 0).mean()) * float(
+                                      (w_in != 0).mean()))
+    print(f"element-granular PE cycle model: {dense_c/sparse_c:.2f}x speedup")
+
+
+if __name__ == "__main__":
+    main()

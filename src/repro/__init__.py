@@ -1,0 +1,2 @@
+"""repro — FlexNN (dataflow-aware flexible accelerator) as a JAX framework."""
+__version__ = "1.0.0"

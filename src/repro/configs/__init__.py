@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    ArchConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SHAPES,
+    ShapeConfig,
+    SparsityConfig,
+    SSMConfig,
+    cells,
+    get_config,
+    get_smoke_config,
+    scaled_shape,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS", "ArchConfig", "MoEConfig", "RGLRUConfig", "SHAPES",
+    "ShapeConfig", "SparsityConfig", "SSMConfig", "cells", "get_config",
+    "get_smoke_config", "scaled_shape", "shape_applicable",
+]

@@ -1,0 +1,21 @@
+"""FlexNN core: schedules, energy model, scheduler, sparsity, FlexTree."""
+from repro.core.energy_model import (
+    Accelerator, ConvLayer, Cost, DENSE, EYERISS, FLEXNN, Schedule,
+    SparsityStats, TPU, evaluate, flexnn_variant, rf_feasible,
+)
+from repro.core.scheduler import (
+    MatmulSchedule, TPUHardware, TPU_V5E, enumerate_schedules,
+    optimize_layer, optimize_network, select_matmul_schedule,
+)
+from repro.core.flextree import (
+    ReduceConfig, best_strategy, flextree_cycles, flextree_speedup_vs_chain,
+    flextree_speedup_vs_fixed, link_bytes, neighbor_chain_cycles, reduce_psum,
+)
+from repro.core.sparsity import (
+    BlockSparseMeta, block_bitmap, build_block_sparse_meta, combined_bitmap,
+    csb_popcount, prune_magnitude, simulate_pe_cycles, zvc_decode,
+    zvc_decode_np, zvc_encode, zvc_encode_np,
+)
+from repro.core.descriptors import (
+    NetworkSchedule, SiteDescriptor, compile_network_schedule, matmul_sites,
+)

@@ -1,0 +1,193 @@
+"""Vectorized (numpy) schedule-space evaluation.
+
+Semantics mirror ``energy_model.evaluate`` exactly — the scalar version is
+the readable specification, this is the fast path used by the search.  The
+property test ``tests/test_schedule.py::test_batch_matches_scalar`` pins the
+two together.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.energy_model import (
+    Accelerator, BITMAP_OVERHEAD, ConvLayer, DATA_BYTES, DENSE, PSUM_BYTES,
+    Schedule, SparsityStats, _RELEVANT, evaluate,
+)
+
+_DIM_IDX = {"oc": 0, "ic": 1, "oy": 2, "ox": 3}
+
+
+def _candidate_grid(layer: ConvLayer, acc: Accelerator,
+                    p_sets: Sequence[dict],
+                    b_ics, b_ocs, b_oxs, b_oys,
+                    sp: SparsityStats) -> Optional[Dict[str, np.ndarray]]:
+    """Cartesian grid of (partition × blocking), RF-feasibility filtered."""
+    P = np.array([[p["p_ic"], p["p_oc"], p["p_ox"], p["p_oy"],
+                   p.get("p_fy", 1)] for p in p_sets], dtype=np.int64)
+    B = np.array(np.meshgrid(b_ics, b_ocs, b_oxs, b_oys, indexing="ij"),
+                 dtype=np.int64).reshape(4, -1).T   # (nb, 4): ic, oc, ox, oy
+    nb, npart = B.shape[0], P.shape[0]
+    b = np.repeat(B, npart, axis=0)                 # (nb*npart, 4)
+    p = np.tile(P, (nb, 1))
+
+    ic_g = layer.ic // layer.groups
+    b_ic = np.minimum(b[:, 0], ic_g)
+    b_oc = np.minimum(b[:, 1], layer.oc)
+    b_ox = np.minimum(b[:, 2], layer.ox)
+    b_oy = np.minimum(b[:, 3], layer.oy)
+    p_ic, p_oc, p_ox, p_oy, p_fy = (p[:, i] for i in range(5))
+
+    fy_pe = -(-layer.fy // p_fy)
+    b_ixt = (b_ox - 1) * layer.stride + layer.fx
+    b_iyt = (b_oy - 1) * layer.stride + fy_pe
+    if_tile = b_ixt * b_iyt * b_ic * DATA_BYTES
+    fl_tile = layer.fx * fy_pe * b_ic * b_oc * DATA_BYTES
+    of_tile = b_ox * b_oy * b_oc
+
+    d_if = min(sp.act_density, 1.0)
+    d_fl = min(sp.wt_density, 1.0)
+    feas = ((b_ixt * b_iyt * b_ic * d_if <= acc.rf_if)
+            & (layer.fx * fy_pe * b_ic * b_oc * d_fl <= acc.rf_fl)
+            & (of_tile <= acc.rf_of))
+    if not feas.any():
+        return None
+
+    sel = lambda a: a[feas]
+    out = dict(
+        b_ic=sel(b_ic), b_oc=sel(b_oc), b_ox=sel(b_ox), b_oy=sel(b_oy),
+        p_ic=sel(p_ic), p_oc=sel(p_oc), p_ox=sel(p_ox), p_oy=sel(p_oy),
+        p_fy=sel(p_fy), if_tile=sel(if_tile), fl_tile=sel(fl_tile),
+        of_tile=sel(of_tile), fy_pe=sel(np.broadcast_to(fy_pe, b_ic.shape)),
+    )
+    out["trips"] = np.stack([
+        -(-layer.oc // (out["b_oc"] * out["p_oc"])),
+        -(-ic_g // (out["b_ic"] * out["p_ic"])),
+        -(-layer.oy // (out["b_oy"] * out["p_oy"])),
+        -(-layer.ox // (out["b_ox"] * out["p_ox"])),
+    ], axis=1)   # (n, 4) in _DIM_IDX order
+    return out
+
+
+def _fetches(trips: np.ndarray, order: Tuple[str, ...],
+             relevant: frozenset) -> np.ndarray:
+    """Π trips of loops at/outside the innermost relevant loop (trip>1)."""
+    n = trips.shape[0]
+    ordered = trips[:, [_DIM_IDX[d] for d in order]]     # (n, 4)
+    rel = np.array([d in relevant for d in order])       # (4,)
+    live = (ordered > 1) & rel                           # (n, 4)
+    # innermost live position j (or -1)
+    idx = np.arange(4)
+    j = np.where(live.any(axis=1), (live * (idx + 1)).max(axis=1) - 1, -1)
+    prefix = np.cumprod(ordered, axis=1)                 # (n, 4)
+    out = np.ones(n)
+    has = j >= 0
+    out[has] = prefix[has, j[has]]
+    return out
+
+
+def evaluate_grid(layer: ConvLayer, acc: Accelerator, grid: Dict[str, np.ndarray],
+                  order: Tuple[str, ...], sp: SparsityStats,
+                  count_dram: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """(energy, cycles) arrays for all grid candidates under ``order``."""
+    if acc.sparsity_support == "two_sided":
+        d_if, d_fl, pair_p = sp.act_density, sp.wt_density, sp.pair_density
+    elif acc.sparsity_support == "weight":
+        d_if, d_fl, pair_p = 1.0, sp.wt_density, sp.wt_density
+    else:
+        d_if = d_fl = pair_p = 1.0
+    # ZVC raw-mode bypass — mirrors energy_model.evaluate exactly
+    zvc_if = min(d_if + BITMAP_OVERHEAD, 1.0) if d_if < 1.0 else 1.0
+    zvc_fl = min(d_fl + BITMAP_OVERHEAD, 1.0) if d_fl < 1.0 else 1.0
+
+    trips = grid["trips"]
+    rounds = trips.prod(axis=1)
+    f_if = _fetches(trips, order, _RELEVANT["if"])
+    f_fl = _fetches(trips, order, _RELEVANT["fl"])
+    f_of = _fetches(trips, order, _RELEVANT["of"])
+
+    if_copies = grid["p_ic"] * grid["p_ox"] * grid["p_oy"]
+    fl_copies = grid["p_ic"] * grid["p_oc"] * grid["p_fy"]
+    sram_if = f_if * grid["if_tile"] * zvc_if * if_copies
+    sram_fl = f_fl * grid["fl_tile"] * zvc_fl * fl_copies
+
+    of_distinct = trips[:, 0] * trips[:, 2] * trips[:, 3]
+    of_copies = grid["p_oc"] * grid["p_ox"] * grid["p_oy"]
+    spill = np.maximum(f_of - of_distinct, 0.0)
+    sram_of = (spill * grid["of_tile"] * of_copies * 2 * PSUM_BYTES
+               + layer.of_size * DATA_BYTES * min(zvc_if, 1.0))
+
+    n_spatial = (grid["p_ic"] * grid["p_oc"] * grid["p_ox"] * grid["p_oy"]
+                 * grid["p_fy"])
+    n_active = np.minimum(acc.n_pes, n_spatial)
+    rf_fill = (f_if * grid["if_tile"] * zvc_if
+               + f_fl * grid["fl_tile"] * zvc_fl) * n_active
+    macs_eff = layer.macs * pair_p
+    rf_mac_reads = 2.0 * macs_eff * DATA_BYTES
+    rf_of_writes = f_of * grid["of_tile"] * of_copies * PSUM_BYTES
+    rf_bytes = rf_fill + rf_mac_reads + rf_of_writes
+
+    red = grid["p_ic"] * grid["p_fy"]
+    inter = np.where(red > 1,
+                     layer.of_size * PSUM_BYTES * (red - 1), 0.0)
+
+    dram = 0.0
+    if count_dram:
+        dram = (layer.fl_size * zvc_fl + layer.if_size * zvc_if
+                + layer.of_size * min(zvc_if, 1.0)) * DATA_BYTES
+
+    energy = (macs_eff * acc.cost_mac
+              + rf_bytes * acc.cost_rf
+              + (sram_if + sram_fl + sram_of) * acc.cost_sram
+              + inter * (acc.cost_inter_pe or acc.cost_rf)
+              + dram * acc.cost_dram)
+
+    tile_macs = (grid["b_ic"] * grid["b_oc"] * grid["b_ox"] * grid["b_oy"]
+                 * layer.fx * grid["fy_pe"]).astype(np.float64)
+    if pair_p >= 1.0:
+        per_pe = tile_macs
+    else:
+        mean = tile_macs * pair_p
+        var = tile_macs * pair_p * (1 - pair_p)
+        logm = np.log(np.maximum(np.minimum(n_active, acc.pe_rows), 2))
+        per_pe = np.minimum(tile_macs, mean + np.sqrt(2 * var * logm))
+    compute_cyc = per_pe / acc.macs_per_pe
+    load_cyc = (sram_if + sram_fl) / rounds / acc.sram_port_bytes
+    accum = np.zeros(len(rounds))
+    p_ic = grid["p_ic"]
+    has_red = p_ic > 1
+    if acc.flextree:
+        accum[has_red] = (np.ceil(np.log2(p_ic[has_red]))
+                          + np.ceil(grid["of_tile"][has_red] / 4))
+    else:
+        accum[has_red] = p_ic[has_red] + grid["of_tile"][has_red]
+    cycles = rounds * (np.maximum(compute_cyc, load_cyc) + accum)
+    return energy, cycles
+
+
+def search(layer: ConvLayer, acc: Accelerator, sp: SparsityStats,
+           orders: Sequence[Tuple[str, ...]], p_sets: Sequence[dict],
+           b_ics, b_ocs, b_oxs, b_oys, objective: str = "energy",
+           count_dram: bool = True):
+    """Return the best Schedule (re-scored via the scalar ``evaluate``)."""
+    grid = _candidate_grid(layer, acc, p_sets, b_ics, b_ocs, b_oxs, b_oys, sp)
+    if grid is None:
+        return None
+    best_val, best_i, best_order = np.inf, -1, orders[0]
+    for order in orders:
+        energy, cycles = evaluate_grid(layer, acc, grid, order, sp, count_dram)
+        val = {"energy": energy, "cycles": cycles,
+               "edp": energy * cycles}[objective]
+        i = int(np.argmin(val))
+        if val[i] < best_val:
+            best_val, best_i, best_order = float(val[i]), i, order
+    sched = Schedule(
+        order=best_order,
+        b_ic=int(grid["b_ic"][best_i]), b_oc=int(grid["b_oc"][best_i]),
+        b_ox=int(grid["b_ox"][best_i]), b_oy=int(grid["b_oy"][best_i]),
+        p_ic=int(grid["p_ic"][best_i]), p_oc=int(grid["p_oc"][best_i]),
+        p_ox=int(grid["p_ox"][best_i]), p_oy=int(grid["p_oy"][best_i]),
+        p_fy=int(grid["p_fy"][best_i]))
+    return evaluate(layer, sched, acc, sp, count_dram=count_dram)

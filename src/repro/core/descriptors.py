@@ -1,0 +1,125 @@
+"""Per-layer configuration descriptors (FlexNN §III-A/§VI).
+
+In the ASIC, "N control blocks … update the configuration descriptors inside
+individual PE at the onset of each convolution layer based on the optimal
+layer schedule".  Here the same role is played by ``SiteDescriptor``s: one
+per matmul *site* in a network (qkv / attn_out / mlp_in / mlp_out / router /
+experts / lm_head), binding the site's dims to
+
+  * a ``MatmulSchedule`` (stationarity + Pallas block shapes),
+  * a ``ReduceConfig`` (FlexTree: contraction partition + combine strategy),
+  * the sparsity mode in force.
+
+``compile_network_schedule`` is the compiler pass: it walks an ArchConfig,
+derives every site's (M, N, K) for a given input shape and mesh, and runs the
+schedule optimizer per site.  The result is consumed by ``kernels.ops`` (on
+the Pallas path) and recorded in the dry-run metadata so the chosen dataflow
+per layer is observable — the software-visible analogue of FlexNN's
+descriptor registers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.flextree import ReduceConfig, best_strategy
+from repro.core.scheduler import (MatmulSchedule, TPUHardware, TPU_V5E,
+                                  select_matmul_schedule)
+
+
+@dataclass(frozen=True)
+class SiteDescriptor:
+    site: str
+    m: int
+    n: int
+    k: int
+    schedule: MatmulSchedule
+    reduce: ReduceConfig
+    sparsity_mode: str = "dense"      # dense | weight | two_sided
+
+    def describe(self) -> str:
+        s = self.schedule
+        return (f"{self.site}: M={self.m} N={self.n} K={self.k} "
+                f"{s.stationarity}-stationary ({s.bm}x{s.bn}x{s.bk}) "
+                f"ic_p={self.reduce.ic_p}/{self.reduce.strategy} "
+                f"[{self.sparsity_mode}]")
+
+
+@dataclass
+class NetworkSchedule:
+    arch: str
+    shape: str
+    sites: Dict[str, SiteDescriptor] = field(default_factory=dict)
+
+    def describe(self) -> str:
+        lines = [f"# NetworkSchedule {self.arch} @ {self.shape}"]
+        lines += ["  " + d.describe() for d in self.sites.values()]
+        return "\n".join(lines)
+
+
+def matmul_sites(cfg: ArchConfig, shape: ShapeConfig,
+                 model_shards: int = 1) -> List[Tuple[str, int, int, int]]:
+    """Every matmul site (name, M, N, K) as lowered per device-row.
+
+    M = tokens per step; TP sharding divides N (or K) by ``model_shards`` —
+    the per-device matmul is what the schedule applies to.
+    """
+    if shape.kind == "train" or shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        tokens = shape.global_batch            # one new token per sequence
+    d = cfg.d_model
+    hd = cfg.head_dim
+    ms = model_shards
+    sites: List[Tuple[str, int, int, int]] = [
+        ("attn.q", tokens, cfg.n_heads * hd // ms, d),
+        ("attn.kv", tokens, 2 * max(cfg.n_kv_heads // ms, 1) * hd, d),
+        ("attn.out", tokens, d, cfg.n_heads * hd // ms),
+    ]
+    if cfg.moe.enabled:
+        sites.append(("moe.router", tokens, cfg.moe.n_experts, d))
+        cap = int(tokens * cfg.moe.top_k / cfg.moe.n_experts
+                  * cfg.moe.capacity_factor) + 1
+        sites.append(("moe.expert_in", cap, 3 * cfg.moe.expert_d_ff, d))
+        sites.append(("moe.expert_out", cap, d, cfg.moe.expert_d_ff))
+        if cfg.moe.n_shared:
+            sites.append(("moe.shared_in", tokens,
+                          3 * cfg.moe.expert_d_ff * cfg.moe.n_shared // ms, d))
+    elif cfg.d_ff:
+        sites.append(("mlp.in", tokens, 3 * cfg.d_ff // ms, d))
+        sites.append(("mlp.out", tokens, d, cfg.d_ff // ms))
+    if cfg.ssm.enabled:
+        d_in = cfg.ssm.expand * d
+        sites = [("ssm.in_proj", tokens, (2 * d_in) // ms, d),
+                 ("ssm.out_proj", tokens, d, d_in // ms)]
+    if cfg.rglru.enabled:
+        w = cfg.rglru.lru_width
+        sites.append(("rglru.in", tokens, 2 * w // ms, d))
+        sites.append(("rglru.out", tokens, d, w // ms))
+    sites.append(("lm_head", tokens, cfg.vocab // ms, d))
+    return sites
+
+
+def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
+                             model_shards: int = 1,
+                             contraction_axis: str = "model",
+                             hw: TPUHardware = TPU_V5E) -> NetworkSchedule:
+    """The compiler pass: optimal schedule per site (§III-A role)."""
+    ns = NetworkSchedule(arch=cfg.name, shape=shape.name)
+    spars = ("two_sided" if cfg.sparsity.enabled else "dense")
+    for site, m, n, k in matmul_sites(cfg, shape, model_shards):
+        # FlexTree decision: partition the contraction if K is large and the
+        # site's weight is K-sharded (attn.out / mlp.out style sites).
+        k_sharded = site.endswith(".out") or site.endswith("out_proj")
+        ic_p = model_shards if (k_sharded and model_shards > 1) else 1
+        sched = select_matmul_schedule(m, n, k, hw=hw, ic_p=ic_p)
+        payload = m * n * 4.0     # f32 psums
+        strat = best_strategy(payload, ic_p, consumer_sharded=False)
+        ns.sites[site] = SiteDescriptor(
+            site=site, m=m, n=n, k=k, schedule=sched,
+            reduce=ReduceConfig(axis_name=contraction_axis, ic_p=ic_p,
+                                strategy=strat),
+            sparsity_mode=spars,
+        )
+    return ns

@@ -1,0 +1,205 @@
+"""Two-sided sparsity machinery (FlexNN §III-D).
+
+Three layers of the paper's idea, adapted per DESIGN.md §2:
+
+1. **ZVC codec** — zero-value compression: dense tensor → (packed non-zeros,
+   1-bit/element bitmap).  Used at rest (checkpoint/weights), on the wire
+   (compressed gradient all-reduce) and by the energy model.  Fixed-shape
+   jnp variants (padded packing) keep it jit-compatible; exact numpy
+   variants back the property tests.
+
+2. **Combined sparsity bitmap (CSB)** — `IF_bitmap AND FL_bitmap` and its
+   popcount: the number of MAC pairs that actually fire (Fig 13).
+
+3. **Block-sparse metadata** — the TPU-granular adaptation: per-tile bitmaps
+   for A (M×K) and B (K×N), CSB per (m,n) output tile = AND across the K
+   blocks, compressed into a scalar-prefetch index list consumed by
+   ``kernels.block_sparse`` (the CAG unit analogue).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# 1. ZVC codec
+# ---------------------------------------------------------------------------
+
+def zvc_encode_np(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact variable-length ZVC: (non-zero values, bool bitmap)."""
+    flat = x.reshape(-1)
+    bitmap = flat != 0
+    return flat[bitmap], bitmap.reshape(x.shape)
+
+
+def zvc_decode_np(values: np.ndarray, bitmap: np.ndarray) -> np.ndarray:
+    out = np.zeros(bitmap.size, dtype=values.dtype)
+    out[bitmap.reshape(-1)] = values
+    return out.reshape(bitmap.shape)
+
+
+def zvc_encode(x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Jit-compatible ZVC with fixed-size output buffer.
+
+    Returns (packed, bitmap, nnz): ``packed`` has ``x.size`` slots; the first
+    ``nnz`` hold the non-zeros in scan order (the SRAM layout of Fig 12),
+    the rest are zero-padding.
+    """
+    flat = x.reshape(-1)
+    bitmap = flat != 0
+    # position of each non-zero in the packed stream
+    pos = jnp.cumsum(bitmap) - 1
+    packed = jnp.zeros_like(flat).at[jnp.where(bitmap, pos, flat.shape[0] - 1)].set(
+        jnp.where(bitmap, flat, 0), mode="drop")
+    # note: collisions on the dump slot are fine — value written is 0 unless
+    # the last element is non-zero, which cumsum places correctly anyway.
+    nnz = jnp.sum(bitmap.astype(jnp.int32))
+    return packed, bitmap.reshape(x.shape), nnz
+
+
+def zvc_decode(packed: jax.Array, bitmap: jax.Array) -> jax.Array:
+    flat_bm = bitmap.reshape(-1)
+    pos = jnp.cumsum(flat_bm) - 1
+    gathered = jnp.take(packed, jnp.clip(pos, 0, packed.shape[0] - 1))
+    return jnp.where(flat_bm, gathered, 0).reshape(bitmap.shape).astype(packed.dtype)
+
+
+def zvc_compressed_bytes(x: np.ndarray, elem_bytes: int = 1) -> float:
+    """Storage cost: packed non-zeros + 1 bit/element bitmap (§IV)."""
+    nnz = int(np.count_nonzero(x))
+    return nnz * elem_bytes + x.size / 8.0
+
+
+# ---------------------------------------------------------------------------
+# 2. Combined sparsity bitmap
+# ---------------------------------------------------------------------------
+
+def combined_bitmap(if_bitmap: jax.Array, fl_bitmap: jax.Array) -> jax.Array:
+    """CSB = IF ∧ FL (Fig 13) — positions where a MAC actually fires."""
+    return jnp.logical_and(if_bitmap, fl_bitmap)
+
+
+def csb_popcount(if_bitmap: jax.Array, fl_bitmap: jax.Array) -> jax.Array:
+    return jnp.sum(combined_bitmap(if_bitmap, fl_bitmap).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# 3. Monte-Carlo / closed-form PE cycle simulation (§V-C model)
+# ---------------------------------------------------------------------------
+
+def simulate_pe_cycles(block_macs: int, n_pes: int, rounds: int,
+                       pair_density: float, macs_per_pe: int = 8,
+                       seed: int = 0, mc: bool = False) -> float:
+    """Cycles for `rounds` lockstep rounds where each of ``n_pes`` PEs
+    processes Binomial(block_macs, pair_density) surviving MACs.
+
+    The *max* across PEs gates each round (§II-B workload imbalance).
+    """
+    if pair_density >= 1.0:
+        return rounds * block_macs / macs_per_pe
+    if mc:
+        rng = np.random.default_rng(seed)
+        n_sim = min(rounds, 256)
+        draws = rng.binomial(block_macs, pair_density, size=(n_sim, n_pes))
+        per_round = draws.max(axis=1).mean()
+        return rounds * float(per_round) / macs_per_pe
+    mean = block_macs * pair_density
+    var = block_macs * pair_density * (1 - pair_density)
+    exp_max = min(block_macs, mean + math.sqrt(max(2 * var * math.log(max(n_pes, 2)), 0.0)))
+    return rounds * exp_max / macs_per_pe
+
+
+# ---------------------------------------------------------------------------
+# 4. Block-sparse metadata for the Pallas kernel
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BlockSparseMeta:
+    """Scalar-prefetch metadata for two-sided block-sparse matmul.
+
+    For each output tile (mi, ni): ``kidx[mi, ni, :]`` lists the K-block
+    indices where *both* A[mi, k] and B[k, ni] blocks are non-zero (the CSB),
+    padded with 0 up to ``max_nnz``; ``kcnt[mi, ni]`` is the live count.
+    """
+    kidx: jax.Array      # (tm, tn, max_nnz) int32
+    kcnt: jax.Array      # (tm, tn) int32
+    a_bitmap: jax.Array  # (tm, tk) bool
+    b_bitmap: jax.Array  # (tk, tn) bool
+    max_nnz: int
+
+    @property
+    def skip_fraction(self) -> float:
+        total = self.kcnt.shape[0] * self.kcnt.shape[1] * self.a_bitmap.shape[1]
+        return 1.0 - float(jnp.sum(self.kcnt)) / max(total, 1)
+
+
+def block_bitmap(x: np.ndarray, bm: int, bk: int) -> np.ndarray:
+    """(M,K) -> (M/bm, K/bk) bool: True where the block has any non-zero."""
+    m, k = x.shape
+    tm, tk = -(-m // bm), -(-k // bk)
+    pad = np.zeros((tm * bm, tk * bk), dtype=x.dtype)
+    pad[:m, :k] = x
+    blocks = pad.reshape(tm, bm, tk, bk)
+    return np.abs(blocks).max(axis=(1, 3)) > 0
+
+
+def build_block_sparse_meta(a: np.ndarray, b: np.ndarray,
+                            bm: int, bk: int, bn: int,
+                            a_bitmap: Optional[np.ndarray] = None,
+                            b_bitmap: Optional[np.ndarray] = None,
+                            ) -> BlockSparseMeta:
+    """CSB → compressed K-index lists (the CAG address-generation analogue)."""
+    a_bm = block_bitmap(a, bm, bk) if a_bitmap is None else a_bitmap
+    b_bm = block_bitmap(b, bk, bn) if b_bitmap is None else b_bitmap
+    tm, tk = a_bm.shape
+    tk2, tn = b_bm.shape
+    assert tk == tk2, (tk, tk2)
+    csb = a_bm[:, None, :] & b_bm.T[None, :, :]       # (tm, tn, tk)
+    kcnt = csb.sum(axis=-1).astype(np.int32)
+    max_nnz = max(int(kcnt.max()), 1)
+    kidx = np.zeros((tm, tn, max_nnz), dtype=np.int32)
+    for mi in range(tm):
+        for ni in range(tn):
+            live = np.nonzero(csb[mi, ni])[0]
+            kidx[mi, ni, :live.size] = live
+    return BlockSparseMeta(
+        kidx=jnp.asarray(kidx), kcnt=jnp.asarray(kcnt),
+        a_bitmap=jnp.asarray(a_bm), b_bitmap=jnp.asarray(b_bm),
+        max_nnz=max_nnz)
+
+
+def prune_magnitude(w: np.ndarray, sparsity: float,
+                    block: Optional[Tuple[int, int]] = None) -> np.ndarray:
+    """Magnitude pruning (the paper's NNCF-style RB-sparsity stand-in).
+
+    ``block`` prunes whole (bm, bk) blocks by L2 norm — the TPU-granular
+    variant consumed by the block-sparse kernel.
+    """
+    if sparsity <= 0:
+        return w
+    out = w.copy()
+    if block is None:
+        thr = np.quantile(np.abs(w), sparsity)
+        out[np.abs(w) <= thr] = 0
+        return out
+    bm, bk = block
+    m, k = w.shape
+    tm, tk = -(-m // bm), -(-k // bk)
+    pad = np.zeros((tm * bm, tk * bk), dtype=w.dtype)
+    pad[:m, :k] = w
+    norms = np.sqrt((pad.reshape(tm, bm, tk, bk) ** 2).sum(axis=(1, 3)))
+    thr = np.quantile(norms, sparsity)
+    mask = (norms > thr).astype(w.dtype)
+    pad = pad.reshape(tm, bm, tk, bk) * mask[:, None, :, None]
+    return pad.reshape(tm * bm, tk * bk)[:m, :k]
+
+
+def relu_activation_bitmap(x: jax.Array, threshold: float = 0.0) -> jax.Array:
+    """Activation bitmap after thresholding (§II-B ReLU-induced sparsity)."""
+    return jnp.abs(x) > threshold

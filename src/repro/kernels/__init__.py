@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Three kernels, each with a pure-jnp oracle in ``ref.py`` and a jit'd
+dispatch wrapper in ``ops.py`` (DESIGN.md D3 — dual execution paths):
+
+  flex_matmul      schedule-flexible matmul (stationarity × block shapes ×
+                   grid order: the VPE's configurable dataflow)
+  block_sparse     two-sided block-sparse matmul (CSB + scalar-prefetch
+                   compressed index list: the CAG unit)
+  flash_attention  blockwise online-softmax attention, causal + window
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated in interpret mode on CPU.  Call sites go through ``ops``:
+
+    from repro.kernels import ops
+    ops.flex_matmul(x, w, site="mlp.in")
+
+(no symbol re-exports here: ``ops.flex_matmul`` the function and
+``kernels.flex_matmul`` the module share a name by design — the module is
+the kernel, the function is the dispatcher).
+"""

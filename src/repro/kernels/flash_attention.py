@@ -1,0 +1,118 @@
+"""Blockwise (flash) attention Pallas kernel — causal + sliding window.
+
+Online-softmax over KV blocks with the running (m, l, acc) state held in
+VMEM scratch; KV blocks entirely in the masked-out region (future of a
+causal query block, or older than the window) are *skipped* at the grid
+level via ``pl.when`` — the same skip-dead-work idea as FlexNN's CSB, here
+driven by the structural attention mask instead of data sparsity.
+
+Layout: heads pre-flattened/broadcast by the wrapper — q (BH, Sq, hd),
+k/v (BH, Skv, hd).  Oracle: ``ref.flash_attention_ref``; the model-level
+twin is ``models.attention.flash_attention_xla``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               n_kv: int, bq: int, bkv: int, causal: bool, window: int,
+               offset: int, scale: float):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level liveness: does this (q-block, kv-block) intersect the mask?
+    q_lo = qi * bq + offset          # first absolute q position in the block
+    k_lo = ki * bkv
+    live = True
+    if causal:
+        live = jnp.asarray(k_lo <= q_lo + bq - 1)            # not all-future
+    if window:
+        live = jnp.logical_and(
+            live, (q_lo - (k_lo + bkv - 1)) < window)        # not all-stale
+
+    @pl.when(live if causal or window else ki >= 0)
+    def _block():
+        q = q_ref[0]                                  # (bq, hd)
+        k = k_ref[0]                                  # (bkv, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal or window:
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            mask = jnp.ones((bq, bkv), jnp.bool_)
+            if causal:
+                mask &= qpos >= kpos
+            if window:
+                mask &= (qpos - kpos) < window
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_ref[...], s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] \
+            + jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                      preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal", "window",
+                                             "interpret"))
+def _flash(q, k, v, *, bq, bkv, causal, window, interpret):
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    nq, nkv = sq // bq, skv // bkv
+    offset = skv - sq        # align sequence ends (decode: sq < skv)
+    scale = hd ** -0.5
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, n_kv=nkv, bq=bq, bkv=bkv,
+                          causal=causal, window=window, offset=offset,
+                          scale=scale),
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(q, k, v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = 128, bkv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (BH, Sq, hd), k/v (BH, Skv, hd) -> (BH, Sq, hd)."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
+    return _flash(q, k, v, bq=bq, bkv=bkv, causal=causal, window=window,
+                  interpret=interpret)

@@ -1,0 +1,178 @@
+"""Schedule-flexible Pallas TPU matmul — the VPE's V×V / M×M templates.
+
+FlexNN's PE reconfigures its loading/access pattern per layer so that the
+schedule-chosen operand stays resident in the RF (IS / WS / OS).  On TPU the
+analogous decision is which operand's VMEM block stays resident across the
+*innermost* grid axis:
+
+  stationarity='output' : grid (m, n, k) — k innermost.  The f32 accumulator
+      block lives in VMEM scratch for the whole K loop; A and B blocks
+      stream.  No psum traffic to HBM (the OS schedule).
+  stationarity='weight' : grid (n, k, m) — m innermost.  The B (weight)
+      block is fetched once per (n, k) and reused by every M step (the WS
+      schedule); the output block is revisited per k (psum spills to HBM,
+      exactly the §III-B external-psum path).
+  stationarity='input'  : grid (m, k, n) — n innermost.  The A (activation)
+      block is resident (IS).
+
+Block shapes (bm, bn, bk) are the FlexNN *loop blocking* (IC_B/OC_B/OX_B);
+the grid order is the *loop order*; both arrive via a ``MatmulSchedule``
+descriptor chosen per site by the scheduler (§III-A).
+
+Validated in interpret mode against ``ref.matmul_ref`` (CPU has no MXU; the
+TPU is the target).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCKS = (128, 128, 128)
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _os_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """Output-stationary: accumulator in VMEM scratch across the K loop."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _revisit_kernel(a_ref, b_ref, o_ref, *, k_axis: int):
+    """Weight/input-stationary: output block revisited once per K step —
+    read-modify-write psum accumulation in the (f32) output buffer."""
+    k = pl.program_id(k_axis)
+    part = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _first():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _rest():
+        o_ref[...] += part
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (one per stationarity = one per dataflow)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "stationarity",
+                                             "interpret", "out_dtype"))
+def _flex_matmul(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
+                 stationarity: str, interpret: bool,
+                 out_dtype) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    a = _pad_to(a, bm, bk)
+    b = _pad_to(b, bk, bn)
+    mp, kp = a.shape
+    np_ = b.shape[1]
+    tm, tn, tk = mp // bm, np_ // bn, kp // bk
+
+    if stationarity == "output":
+        grid = (tm, tn, tk)
+        out = pl.pallas_call(
+            functools.partial(_os_kernel, n_k=tk),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+            scratch_shapes=[_vmem_scratch((bm, bn))],
+            interpret=interpret,
+            compiler_params=_dim_semantics(("parallel", "parallel",
+                                            "arbitrary"), interpret),
+        )(a, b)
+    elif stationarity == "weight":
+        grid = (tn, tk, tm)     # m innermost: B block resident across m
+        out = pl.pallas_call(
+            functools.partial(_revisit_kernel, k_axis=1),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+            compiler_params=_dim_semantics(("parallel", "arbitrary",
+                                            "arbitrary"), interpret),
+        )(a, b).astype(out_dtype)
+    elif stationarity == "input":
+        grid = (tm, tk, tn)     # n innermost: A block resident across n
+        out = pl.pallas_call(
+            functools.partial(_revisit_kernel, k_axis=1),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+            compiler_params=_dim_semantics(("parallel", "arbitrary",
+                                            "arbitrary"), interpret),
+        )(a, b).astype(out_dtype)
+    else:
+        raise ValueError(f"unknown stationarity {stationarity!r}")
+    return out[:m, :n]
+
+
+def _vmem_scratch(shape: Tuple[int, ...]):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _dim_semantics(sem: Tuple[str, ...], interpret: bool):
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.CompilerParams(dimension_semantics=sem)
+
+
+def flex_matmul(a: jax.Array, b: jax.Array, *, schedule=None,
+                interpret: bool = False,
+                out_dtype=None) -> jax.Array:
+    """C[M,N] = A[M,K] @ B[K,N] under a FlexNN ``MatmulSchedule``.
+
+    ``schedule`` carries (stationarity, bm, bn, bk); None uses the
+    output-stationary default with 128³ blocks.
+    """
+    if schedule is None:
+        stationarity, (bm, bn, bk) = "output", DEFAULT_BLOCKS
+    else:
+        stationarity = schedule.stationarity
+        bm, bn, bk = schedule.bm, schedule.bn, schedule.bk
+    m, k = a.shape
+    n = b.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    out_dtype = out_dtype or a.dtype
+    return _flex_matmul(a, b, bm=bm, bn=bn, bk=bk, stationarity=stationarity,
+                        interpret=interpret, out_dtype=out_dtype)

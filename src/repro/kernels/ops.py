@@ -1,0 +1,89 @@
+"""Jit'd dispatch wrappers for the Pallas kernels (DESIGN.md D3).
+
+Every matmul site in the model zoo calls ``flex_matmul``; a process-wide
+execution config decides whether the Pallas TPU kernels run (TPU target /
+interpret mode) or the semantically identical XLA ops (CPU tests and the
+compile-only dry-run — Pallas TPU kernels do not lower for the CPU backend).
+
+The Pallas path consults the site's ``MatmulSchedule`` (FlexNN descriptor)
+for stationarity + block shapes; the XLA path leaves tiling to XLA while the
+*sharding*-level schedule decisions still apply.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+_state = threading.local()
+
+
+@dataclass(frozen=True)
+class ExecConfig:
+    use_pallas: bool = False          # run Pallas kernels (TPU / interpret)
+    interpret: bool = False           # Pallas interpret mode (CPU validation)
+    schedules: Optional[object] = None   # NetworkSchedule (descriptor table)
+    default_stationarity: str = "output"
+
+
+def _cfg() -> ExecConfig:
+    return getattr(_state, "cfg", None) or ExecConfig()
+
+
+@contextlib.contextmanager
+def exec_config(cfg: ExecConfig):
+    prev = getattr(_state, "cfg", None)
+    _state.cfg = cfg
+    try:
+        yield cfg
+    finally:
+        _state.cfg = prev
+
+
+def site_schedule(site: str):
+    cfg = _cfg()
+    if cfg.schedules is not None and site in cfg.schedules.sites:
+        return cfg.schedules.sites[site].schedule
+    return None
+
+
+def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
+                precision=None) -> jax.Array:
+    """x (..., K) @ w (K, N) through the schedule-flexible matmul.
+
+    Pallas path: ``kernels.flex_matmul`` with the site's descriptor
+    (stationarity / block shapes).  XLA path: dot_general (tiling delegated
+    to XLA; sharding-level schedule still applies upstream).
+    """
+    cfg = _cfg()
+    if cfg.use_pallas and x.ndim >= 2:
+        from repro.kernels import flex_matmul as fm
+        sched = site_schedule(site)
+        lead = x.shape[:-1]
+        m = 1
+        for d in lead:
+            m *= d
+        x2 = x.reshape(m, x.shape[-1])
+        out = fm.flex_matmul(x2, w, schedule=sched, interpret=cfg.interpret)
+        return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        precision=precision, preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def block_sparse_matmul(x: jax.Array, w: jax.Array, meta, *,
+                        site: str = "") -> jax.Array:
+    """Two-sided block-sparse matmul (CSB-skipped).  ``meta`` is a
+    ``core.sparsity.BlockSparseMeta``; None falls back to dense."""
+    cfg = _cfg()
+    if meta is None:
+        return flex_matmul(x, w, site=site)
+    from repro.kernels import block_sparse as bs
+    if cfg.use_pallas:
+        return bs.block_sparse_matmul(x, w, meta, interpret=cfg.interpret)
+    return bs.block_sparse_matmul_ref(x, w, meta)

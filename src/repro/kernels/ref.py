@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each kernel in this package has a reference here computing the same function
+with plain jax.numpy.  The per-kernel tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation (oracle for flex_matmul)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def block_sparse_matmul_ref(a: jax.Array, b: jax.Array, meta) -> jax.Array:
+    """Oracle for the two-sided block-sparse matmul.
+
+    Semantics: out tile (mi, ni) = Σ over the CSB-live K blocks of
+    A[mi, k] @ B[k, ni].  Blocks outside the combined bitmap contribute
+    exactly zero (they are *skipped*, not approximated), so when the bitmaps
+    are exact (built from the data) this equals the dense product.
+    """
+    bm = a.shape[0] // meta.a_bitmap.shape[0]
+    bk = a.shape[1] // meta.a_bitmap.shape[1]
+    bn = b.shape[1] // meta.b_bitmap.shape[1]
+    tm, tk = meta.a_bitmap.shape
+    _, tn = meta.b_bitmap.shape
+    # zero out blocks whose bitmap is 0 (mirrors the skip), then dense matmul
+    a_mask = jnp.repeat(jnp.repeat(meta.a_bitmap, bm, 0), bk, 1)
+    b_mask = jnp.repeat(jnp.repeat(meta.b_bitmap, bk, 0), bn, 1)
+    a_z = jnp.where(a_mask, a, 0).astype(a.dtype)
+    b_z = jnp.where(b_mask, b, 0).astype(b.dtype)
+    return jnp.dot(a_z, b_z, preferred_element_type=jnp.float32)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the flash-attention kernel.
+
+    q (BH, Sq, hd), k/v (BH, Skv, hd) — heads already flattened/broadcast.
+    """
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqh,bkh->bqk", q, k).astype(jnp.float32) * scale
+    if causal or window:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)   # align ends
+        kpos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w.astype(v.dtype), v)
+
+
+def int8_matmul_ref(a: jax.Array, q: jax.Array, scale: jax.Array
+                    ) -> jax.Array:
+    """Oracle for the int8-weight matmul: dequantize then dense product."""
+    w = q.astype(jnp.float32) * scale[None, :]
+    return jnp.dot(a.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)
+
+
+def zvc_roundtrip_ref(x: jax.Array):
+    """Oracle identity for the ZVC codec: decode(encode(x)) == x."""
+    return x

@@ -1,0 +1,153 @@
+"""Per-cell step builders shared by the dry-run, roofline and launchers.
+
+For one (arch × shape × mesh) cell this module builds everything
+``jax.jit(...).lower(...)`` needs:
+
+    fn            the step function (train / prefill / decode), rules-bound
+    args          ShapeDtypeStruct stand-ins for every input (no allocation)
+    in_shardings  NamedSharding pytrees matching ``args``
+    out_shardings NamedSharding pytrees (params/opt/state round-trip exactly,
+                  enabling donation)
+    donate        argnums donated (params+opt for train, state for decode)
+
+The sharding assignment flows from ``sharding.partition`` rules; per-cell
+flags (SP cache sharding, FSDP on/off) come from ``configs.cells``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, get_config
+from repro.configs.cells import CellFlags, cell_flags, cell_shape, clamp_micro
+from repro.models import model as model_lib
+from repro.sharding.partition import (Rules, batch_shardings, make_rules,
+                                      partition_params, use_rules)
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_step_fn
+
+
+@dataclass
+class CellStep:
+    name: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    rules: Rules
+    shape: ShapeConfig
+    cfg: ArchConfig
+
+
+def _dp_size(mesh: Mesh) -> int:
+    dp = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        dp *= mesh.shape["pod"]
+    return dp
+
+
+def params_abstract(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(model_lib.init_params, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def opt_abstract(params_sds):
+    return jax.eval_shape(init_opt_state, params_sds)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_rules(cfg: ArchConfig, mesh: Mesh, kind: str,
+                flags: CellFlags) -> Rules:
+    return make_rules(mesh, kind=kind, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, seq_shard=flags.seq_shard,
+                      fsdp=flags.fsdp)
+
+
+def build_cell_step(arch_id: str, shape_name: str, mesh: Mesh, *,
+                    cfg: Optional[ArchConfig] = None,
+                    shape: Optional[ShapeConfig] = None,
+                    flags: Optional[CellFlags] = None,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    dtype=jnp.bfloat16) -> CellStep:
+    """Assemble the lowerable step for one (arch × shape × mesh) cell."""
+    cfg = cfg or get_config(arch_id)
+    shape = shape or cell_shape(arch_id, shape_name)
+    flags = flags or cell_flags(arch_id, shape_name)
+    if shape.kind == "train":
+        shape = clamp_micro(shape, _dp_size(mesh))
+    rules = build_rules(cfg, mesh, shape.kind, flags)
+
+    p_sds = params_abstract(cfg, dtype)
+    p_sh = partition_params(p_sds, rules)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        o_sds = opt_abstract(p_sds)
+        o_sh = type(o_sds)(step=replicated(mesh),
+                           mu=partition_params(o_sds.mu, rules),
+                           nu=partition_params(o_sds.nu, rules))
+        specs = model_lib.input_specs(cfg, shape)
+        b_sh = batch_shardings(specs, mesh, seq_shard=flags.seq_shard)
+        raw = make_step_fn(cfg, shape, opt_cfg)
+
+        def fn(params, opt_state, batch):
+            with use_rules(rules):
+                return raw(params, opt_state, batch)
+
+        metrics_sh = {"loss": replicated(mesh), "grad_norm": replicated(mesh),
+                      "lr": replicated(mesh)}
+        return CellStep(
+            name=f"{arch_id}@{shape_name}", fn=fn,
+            args=(p_sds, o_sds, specs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, metrics_sh),
+            donate=(0, 1), rules=rules, shape=shape, cfg=cfg)
+
+    if shape.kind == "prefill":
+        specs = model_lib.input_specs(cfg, shape)
+        b_sh = batch_shardings(specs, mesh, seq_shard=flags.seq_shard)
+
+        def fn(params, batch):
+            with use_rules(rules):
+                return model_lib.prefill(params, cfg, batch,
+                                         q_chunk=shape.attn_chunk)
+
+        return CellStep(
+            name=f"{arch_id}@{shape_name}", fn=fn,
+            args=(p_sds, specs),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=None,
+            donate=(), rules=rules, shape=shape, cfg=cfg)
+
+    # ---- decode ----
+    specs = model_lib.input_specs(cfg, shape)
+    b_sh = batch_shardings(specs, mesh, seq_shard=flags.seq_shard)
+
+    def fn(params, tokens, state, pos):
+        with use_rules(rules):
+            return model_lib.decode_step(params, cfg, tokens, state, pos)
+
+    return CellStep(
+        name=f"{arch_id}@{shape_name}", fn=fn,
+        args=(p_sds, specs["tokens"], specs["state"], specs["pos"]),
+        in_shardings=(p_sh, b_sh["tokens"], b_sh["state"], b_sh["pos"]),
+        out_shardings=(None, b_sh["state"]),
+        donate=(2,), rules=rules, shape=shape, cfg=cfg)
+
+
+def lower_cell(step: CellStep):
+    jitted = jax.jit(step.fn,
+                     in_shardings=step.in_shardings,
+                     out_shardings=step.out_shardings,
+                     donate_argnums=step.donate)
+    return jitted.lower(*step.args)

@@ -1,0 +1,275 @@
+"""Attention: MHA / GQA / MQA, causal + sliding-window, KV caches.
+
+The long-sequence path is a chunked online-softmax (flash-style) written in
+pure JAX — it is both the memory-feasible XLA execution path (32k-token
+prefill would otherwise materialize S² score tensors) and the oracle for the
+Pallas ``flash_attention`` kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import rope
+from repro.models.unroll import maybe_unrolled_map, maybe_unrolled_scan
+from repro.sharding.partition import shard
+
+Params = Dict[str, jax.Array]
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, rng, dtype=jnp.bfloat16,
+                   cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, ko = jax.random.split(rng, 3)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d, cfg.n_heads * hd)) * s).astype(dtype),
+        "wkv": (jax.random.normal(kk, (d, 2 * cfg.n_kv_heads * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (cfg.n_heads * hd, d)) * s).astype(dtype),
+    }
+    return p
+
+
+def _project_qkv(p: Params, cfg: ArchConfig, x: jax.Array,
+                 kv_x: Optional[jax.Array] = None):
+    """x (B,S,D) -> q (B,S,KVH,G,hd), k/v (B,Skv,KVH,hd)."""
+    b, s, _ = x.shape
+    hd, kvh = cfg.head_dim, cfg.n_kv_heads
+    g = cfg.q_per_kv
+    q = ops.flex_matmul(x, p["wq"], site="attn.q").reshape(b, s, kvh, g, hd)
+    src = x if kv_x is None else kv_x
+    kv = ops.flex_matmul(src, p["wkv"], site="attn.kv")
+    kv = kv.reshape(b, src.shape[1], 2, kvh, hd)
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    return q, k, v
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: Optional[jax.Array]) -> jax.Array:
+    """q (B,Sq,KVH,G,hd), k/v (B,Skv,KVH,hd), mask (B,1,1,Sq,Skv) bool."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+
+class _Carry(NamedTuple):
+    m: jax.Array       # running max      (B,KVH,G,Qc)
+    l: jax.Array       # running sum      (B,KVH,G,Qc)
+    acc: jax.Array     # weighted values  (B,KVH,G,Qc,hd)
+
+
+def _online_block(carry: _Carry, qc, kc, vc, mask_blk, scale) -> _Carry:
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32) * scale
+    s = jnp.where(mask_blk, s, NEG_INF)
+    m_new = jnp.maximum(carry.m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(carry.m - m_new)
+    l_new = carry.l * alpha + p.sum(axis=-1)
+    acc_new = carry.acc * alpha[..., None] \
+        + jnp.einsum("bkgqs,bskh->bkgqh", p.astype(qc.dtype), vc)
+    return _Carry(m_new, l_new, acc_new)
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, q_chunk: int = 512,
+                        kv_chunk: int = 512) -> jax.Array:
+    """Chunked online-softmax attention; never materializes S×S scores."""
+    b, sq, kvh, g, hd = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = hd ** -0.5
+
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, kvh, g, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, nk, kv_chunk, kvh, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kv_chunk, kvh, hd), 1, 0)
+
+    def per_q(qi, qc):
+        init = _Carry(
+            m=jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32),
+            l=jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+            acc=jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32))
+
+        def kv_body(carry, inp):
+            ki, kc, vc = inp
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+            else:
+                mask = jnp.ones((1, 1, 1, q_chunk, kv_chunk), bool)
+            return _online_block(carry, qc, kc, vc, mask, scale), None
+
+        out, _ = maybe_unrolled_scan(kv_body, init,
+                                     (jnp.arange(nk), ks, vs))
+        o = out.acc / jnp.maximum(out.l[..., None], 1e-30)
+        return jnp.moveaxis(o, 3, 1).astype(q.dtype)   # (B,Qc,KVH,G,hd)
+
+    outs = maybe_unrolled_map(lambda t: per_q(t[0], t[1]),
+                              (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, kvh, g, hd)
+
+
+def windowed_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       window: int, q_chunk: int = 512) -> jax.Array:
+    """Causal sliding-window attention with O(S·window) compute: each query
+    chunk attends only to the [pos-window, pos] slice of K/V."""
+    b, sq, kvh, g, hd = q.shape
+    q_chunk = min(q_chunk, sq)
+    nq = sq // q_chunk
+    span = window + q_chunk
+    scale = hd ** -0.5
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, kvh, g, hd), 1, 0)
+
+    def per_q(qi, qc):
+        start = jnp.maximum(qi * q_chunk + q_chunk - span, 0)
+        kc = jax.lax.dynamic_slice_in_dim(k, start, min(span, sq), axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, min(span, sq), axis=1)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+        kpos = start + jnp.arange(kc.shape[1])
+        mask = ((qpos[:, None] >= kpos[None, :])
+                & (qpos[:, None] - kpos[None, :] < window))[None, None, None]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32) * scale
+        s = jnp.where(mask, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(qc.dtype)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", w, vc)
+        return o
+
+    outs = maybe_unrolled_map(lambda t: per_q(t[0], t[1]),
+                              (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, kvh, g, hd)
+
+
+def attention_forward(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                      positions: jax.Array, causal: bool = True,
+                      window: int = 0, kv_x: Optional[jax.Array] = None,
+                      q_chunk: int = 512,
+                      mrope_positions: Optional[jax.Array] = None,
+                      use_flash: Optional[bool] = None,
+                      return_kv: bool = False) -> jax.Array:
+    """Full-sequence attention (train / prefill).
+
+    ``return_kv=True`` additionally returns the (post-RoPE) k, v used —
+    consumed by the cache-filling prefill path in ``models.model``.
+    """
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    if kv_x is None:   # self-attention: rotary on q and k
+        qf = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        qf = rope.apply_rope(qf, positions, kind=cfg.rope,
+                             theta=cfg.rope_theta,
+                             mrope_positions=mrope_positions)
+        q = qf.reshape(q.shape)
+        k = rope.apply_rope(k, positions[:, :k.shape[1]], kind=cfg.rope,
+                            theta=cfg.rope_theta,
+                            mrope_positions=mrope_positions)
+    q = shard(q, "batch", None, "kv_heads", None, None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+
+    if use_flash is None:
+        use_flash = s > 2048
+    if window and causal and s > window:
+        o = windowed_attention(q, k, v, window=window, q_chunk=q_chunk)
+    elif use_flash:
+        # kv chunk tracks the q chunk (≥512) so coarse-chunked lowerings
+        # (roofline unroll) stay O((S/c)²) blocks, not O(S²/(512·c))
+        o = flash_attention_xla(q, k, v, causal=causal, q_chunk=q_chunk,
+                                kv_chunk=max(q_chunk, 512))
+    else:
+        if causal:
+            qpos = positions
+            kpos = positions[:, :k.shape[1]]
+            mask = (qpos[:, :, None] >= kpos[:, None, :])
+            if window:
+                mask &= (qpos[:, :, None] - kpos[:, None, :]) < window
+            mask = mask[:, None, None]
+        else:
+            mask = None
+        o = dense_attention(q, k, v, mask)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = ops.flex_matmul(o, p["wo"], site="attn.out")
+    out = shard(out, "batch", "seq", "embed")   # pin the residual stream (SP-aware)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Rolling cache for windowed layers (size=window), else full length."""
+    size = min(cfg.window, max_seq) if cfg.window else max_seq
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(p: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
+                pos: jax.Array, *, window: int = 0,
+                memory: Optional[Tuple[jax.Array, jax.Array]] = None,
+                ) -> Tuple[jax.Array, Params]:
+    """One-token decode.  x (B,1,D); cache k/v (B,C,KVH,hd); pos scalar.
+
+    ``memory`` short-circuits to cross-attention (whisper decoder): attends
+    to the fixed (k_mem, v_mem) without cache updates.
+    """
+    b = x.shape[0]
+    hd, kvh = cfg.head_dim, cfg.n_kv_heads
+    if memory is not None:
+        q = ops.flex_matmul(x, p["wq"], site="attn.q").reshape(
+            b, 1, kvh, cfg.q_per_kv, hd)
+        k_mem, v_mem = memory
+        o = dense_attention(q, k_mem, v_mem, None)
+        o = o.reshape(b, 1, cfg.n_heads * hd)
+        return ops.flex_matmul(o, p["wo"], site="attn.out"), cache
+
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    posb = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    qf = q.reshape(b, 1, cfg.n_heads, hd)
+    qf = rope.apply_rope(qf, posb, kind=cfg.rope, theta=cfg.rope_theta)
+    q = qf.reshape(q.shape)
+    k_new = rope.apply_rope(k_new, posb, kind=cfg.rope, theta=cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = (pos % size) if window > 0 else jnp.minimum(pos, size - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            slot, axis=1)
+    k = shard(k, "cache_batch", "cache_seq", None, None)
+    v = shard(v, "cache_batch", "cache_seq", None, None)
+
+    # validity mask over cache slots
+    idx = jnp.arange(size)
+    if window > 0:
+        age = pos - _slot_position(idx, pos, size)
+        valid = (age >= 0) & (age < jnp.minimum(window, pos + 1))
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, None, :]
+    o = dense_attention(q, k, v, mask)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    out = ops.flex_matmul(o, p["wo"], site="attn.out")
+    return out, {"k": k, "v": v}
+
+
+def _slot_position(idx: jax.Array, pos: jax.Array, size: int) -> jax.Array:
+    """Original sequence position stored in rolling slot ``idx`` at ``pos``."""
+    cur_slot = pos % size
+    offset = (idx - cur_slot + size) % size
+    return jnp.where(offset == 0, pos, pos - size + offset)

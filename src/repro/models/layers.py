@@ -1,0 +1,128 @@
+"""Common layers: norms, gated MLPs, embeddings, chunked cross-entropy."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models.unroll import maybe_unrolled_scan
+from repro.sharding.partition import shard
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, dim: int, dtype=jnp.bfloat16) -> Params:
+    p = {"scale": jnp.ones((dim,), dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype=jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = xf.mean(-1, keepdims=True)
+        var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU) and plain MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchConfig, rng, d_in: int, d_ff: int,
+             dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = d_in ** -0.5
+    s_ff = d_ff ** -0.5
+    if cfg.act == "gelu_plain":     # whisper: non-gated
+        return {
+            "w_in": (jax.random.normal(k1, (d_in, d_ff)) * s_in).astype(dtype),
+            "w_out": (jax.random.normal(k3, (d_ff, d_in)) * s_ff).astype(dtype),
+        }
+    return {
+        "w_in": (jax.random.normal(k1, (d_in, d_ff)) * s_in).astype(dtype),
+        "w_gate": (jax.random.normal(k2, (d_in, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k3, (d_ff, d_in)) * s_ff).astype(dtype),
+    }
+
+
+def _act(cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "gelu" or cfg.act == "gelu_plain":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    h = ops.flex_matmul(x, p["w_in"], site="mlp.in")
+    if "w_gate" in p:
+        g = ops.flex_matmul(x, p["w_gate"], site="mlp.gate")
+        h = _act(cfg, g) * h
+    else:
+        h = _act(cfg, h)
+    h = shard(h, "batch", None, "ffn")
+    return ops.flex_matmul(h, p["w_out"], site="mlp.out")
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy (DESIGN.md D2)
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(rng, (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype)
+
+
+def embed(cfg: ArchConfig, emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(emb, tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype=x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def logits_head(cfg: ArchConfig, head: jax.Array, x: jax.Array) -> jax.Array:
+    """Full logits — decode-time only (single position)."""
+    logits = jnp.einsum("bsd,vd->bsv", x, head).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard(logits, "batch", None, "vocab")
+
+
+def chunked_softmax_xent(cfg: ArchConfig, head: jax.Array, x: jax.Array,
+                         labels: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; per chunk computes logits = x·headᵀ,
+    log-sum-exp and the label logit.  Keeps live logits at
+    (B, chunk, V/model_shards) — required for the 72B×152k-vocab train
+    cells to fit HBM (DESIGN.md D2).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n_chunks = max(s // chunk, 1)
+    xs = x[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+    ls = labels[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+    xs = jnp.moveaxis(xs, 1, 0)          # (n, B, C, d)
+    ls = jnp.moveaxis(ls, 1, 0)
+
+    def body(carry, inp):
+        xc, lc = inp
+        logits = jnp.einsum("bcd,vd->bcv", xc, head).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)                 # (B, C)
+        lab = jnp.take_along_axis(logits, lc[..., None],
+                                  axis=-1)[..., 0]              # (B, C)
+        return carry + jnp.sum(lse - lab), None
+
+    total, _ = maybe_unrolled_scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (b * n_chunks * chunk)

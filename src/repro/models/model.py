@@ -1,0 +1,206 @@
+"""Top-level model API: ArchConfig → init / loss / prefill / decode.
+
+Single entry point consumed by the trainer, the serving engine, the dry-run
+launcher and the smoke tests.  All functions are pure (params are pytrees);
+distribution happens outside via pjit shardings + the ``sharding.partition``
+logical-axis constraints inside.
+
+Frontend stubs (per the assignment spec): [vlm] archs take precomputed patch
+embeddings ``vis_embeds`` that overwrite the leading token positions (plus
+M-RoPE position streams); [audio] archs take precomputed frame embeddings
+``frames`` feeding the encoder.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import attention, transformer
+from repro.models.layers import (apply_norm, chunked_softmax_xent, embed,
+                                 init_embedding, init_norm, logits_head)
+from repro.sharding.partition import shard
+
+Params = Dict[str, jax.Array]
+
+N_VIS_STUB = 1024       # patch-embedding prefix length for [vlm] (stub)
+
+
+def n_vis(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.frontend != "vision":
+        return 0
+    return min(N_VIS_STUB, seq_len // 4)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_stack, k_head = jax.random.split(rng, 3)
+    p: Params = {
+        "embed": init_embedding(cfg, k_emb, dtype),
+        "stack": transformer.init_stack(cfg, k_stack, dtype),
+        "final_norm": init_norm(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_embedding(cfg, k_head, dtype)
+    return p
+
+
+def head_matrix(p: Params, cfg: ArchConfig) -> jax.Array:
+    return p["embed"] if cfg.tie_embeddings else p["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward_hidden(p: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+                   remat: str = "none", q_chunk: int = 512) -> jax.Array:
+    """Token/frontend inputs → final-norm hidden states (B, S, D)."""
+    if cfg.encoder_decoder:
+        x = embed(cfg, p["embed"], batch["tokens"])
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = transformer.apply_stack(p["stack"], cfg, x, positions=positions,
+                                    remat=remat, q_chunk=q_chunk,
+                                    frames=batch["frames"])
+        return apply_norm(p["final_norm"], cfg, x)
+
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(cfg, p["embed"], tokens)
+    if cfg.frontend == "vision" and "vis_embeds" in batch:
+        nv = batch["vis_embeds"].shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, batch["vis_embeds"].astype(x.dtype), (0, 0, 0))
+        del nv
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = transformer.apply_stack(
+        p["stack"], cfg, x, positions=positions, remat=remat,
+        q_chunk=q_chunk, mrope_positions=batch.get("mrope_positions"))
+    return apply_norm(p["final_norm"], cfg, x)
+
+
+def train_loss(p: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+               remat: str = "none", loss_chunk: int = 512,
+               q_chunk: int = 512) -> jax.Array:
+    x = forward_hidden(p, cfg, batch, remat=remat, q_chunk=q_chunk)
+    return chunked_softmax_xent(cfg, head_matrix(p, cfg), x, batch["labels"],
+                                chunk=loss_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (cache-filling) + decode
+# ---------------------------------------------------------------------------
+
+def prefill(p: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            q_chunk: int = 512) -> jax.Array:
+    """Prompt pass returning last-position logits (B, 1, V).
+
+    For encoder-decoder archs this is the *encoder* pass (the assigned
+    ``prefill_32k`` cell lowers the encoder; see DESIGN.md §5), returning
+    pooled encoder logits-shaped hidden for shape-compat.
+    """
+    if cfg.encoder_decoder:
+        mem = transformer.encode(p["stack"], cfg, batch["frames"],
+                                 q_chunk=q_chunk)
+        return mem[:, -1:, :]
+    x = forward_hidden(p, cfg, batch, q_chunk=q_chunk)
+    return logits_head(cfg, head_matrix(p, cfg), x[:, -1:, :])
+
+
+def prefill_with_cache(p: Params, cfg: ArchConfig,
+                       batch: Dict[str, jax.Array], max_seq: int, *,
+                       dtype=jnp.bfloat16
+                       ) -> Tuple[jax.Array, Params]:
+    """Prompt pass that also fills the decode state (dense families).
+
+    Serving path for plain dense stacks; heterogeneous families fall back to
+    token-by-token prefill in the engine (see ``serve.engine``).
+    """
+    assert not (cfg.encoder_decoder or cfg.ssm.enabled or cfg.rglru.enabled
+                or cfg.moe.enabled), "cache-filling prefill: dense only"
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(cfg, p["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    size = min(cfg.window, max_seq) if cfg.window else max_seq
+
+    def body(h, lp):
+        y = apply_norm(lp["ln1"], cfg, h)
+        o, (k, v) = attention.attention_forward(
+            lp["attn"], cfg, y, positions=positions, window=cfg.window,
+            return_kv=True)
+        h = h + o
+        y = apply_norm(lp["ln2"], cfg, h)
+        from repro.models.layers import apply_mlp
+        h = h + apply_mlp(lp["mlp"], cfg, y)
+        pad = size - k.shape[1]
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        return h, {"k": kc, "v": vc}
+
+    x, caches = jax.lax.scan(body, x, p["stack"]["layers"])
+    x = apply_norm(p["final_norm"], cfg, x)
+    logits = logits_head(cfg, head_matrix(p, cfg), x[:, -1:, :])
+    return logits, {"layers": caches}
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> Params:
+    return transformer.init_decode_state(cfg, batch, max_seq, dtype)
+
+
+def decode_step(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
+                pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """One new token for every sequence.  tokens (B, 1) → logits (B, 1, V)."""
+    x = embed(cfg, p["embed"], tokens)
+    x, state = transformer.decode_stack(p["stack"], cfg, x, state, pos)
+    x = apply_norm(p["final_norm"], cfg, x)
+    return logits_head(cfg, head_matrix(p, cfg), x), state
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins for the dry-run)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, object]:
+    """ShapeDtypeStructs for every model input of the (arch, shape) cell.
+
+    No device allocation — these lower through ``jax.jit(...).lower()``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    S = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        specs = {"tokens": S((b, s), i32), "labels": S((b, s), i32)}
+        if cfg.encoder_decoder:
+            specs["frames"] = S((b, s, cfg.d_model), bf16)
+        if cfg.frontend == "vision":
+            specs["vis_embeds"] = S((b, n_vis(cfg, s), cfg.d_model), bf16)
+            specs["mrope_positions"] = S((3, b, s), i32)
+        return specs
+
+    if shape.kind == "prefill":
+        if cfg.encoder_decoder:
+            return {"frames": S((b, s, cfg.d_model), bf16)}
+        specs = {"tokens": S((b, s), i32)}
+        if cfg.frontend == "vision":
+            specs["vis_embeds"] = S((b, n_vis(cfg, s), cfg.d_model), bf16)
+            specs["mrope_positions"] = S((3, b, s), i32)
+        return specs
+
+    # decode: one new token against a seq_len-deep state
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, s))
+    return {
+        "tokens": S((b, 1), i32),
+        "state": state,
+        "pos": S((), i32),
+    }

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427 §2.4).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t)  with
+a_t = exp(-c·softplus(Λ)·r_t),  r_t/i_t input-dependent sigmoid gates, is a
+*linear* (diagonal) recurrence in h, so the full sequence runs as a
+``jax.lax.associative_scan`` — O(S log S) work, O(log S) depth — which is
+what makes the ``long_500k`` cell runnable for this family (DESIGN.md §5).
+
+Block layout (Griffin "recurrent block"): two d_model→lru_width branches;
+the x-branch goes conv1d(4) → RG-LRU, the gate branch through GeLU; their
+product projects back to d_model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.sharding.partition import shard
+
+Params = Dict[str, jax.Array]
+C_FACTOR = 8.0
+
+
+def init_rglru(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, w)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d, w)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru.d_conv, w)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # recurrence/input gate projections (per-channel, block-diagonal in
+        # the paper; dense here — small relative to the d×w branches)
+        "w_a": (jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": (jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Λ init so a^c ∈ (0.9, 0.999) at r=1 (paper §2.4)
+        "lam": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dtype),
+    }
+
+
+def _gates(p: Params, xw: jax.Array):
+    """Gate values for the conv'd x-branch ``xw`` (..., W): (a, gated_in)."""
+    r = jax.nn.sigmoid((xw @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((xw @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r        # log a_t
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * i * xw.astype(jnp.float32)
+    return a, gated
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def rglru_forward(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence recurrent block.  x (B,S,D) -> (B,S,D)."""
+    xb = ops.flex_matmul(x, p["w_x"], site="rglru.in")
+    gate = ops.flex_matmul(x, p["w_gate"], site="rglru.gate")
+    xb = shard(xb, "batch", None, "ffn")
+    xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    a, gated = _gates(p, xb)
+
+    # linear recurrence h_t = a_t h_{t-1} + gated_t via associative scan:
+    # (a1,b1)∘(a2,b2) = (a1·a2, b1·a2 + b2) — scanned over the seq axis.
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
+    h = shard(h, "batch", None, "ffn")
+    return ops.flex_matmul(h, p["w_out"], site="rglru.out")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Params:
+    w = cfg.rglru.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, w), dtype),
+    }
+
+
+def rglru_decode_step(p: Params, cfg: ArchConfig, x: jax.Array,
+                      state: Params) -> Tuple[jax.Array, Params]:
+    """x (B,1,D); state {h (B,W), conv (B,K-1,W)}."""
+    xb = (x[:, 0] @ p["w_x"])
+    gate = x[:, 0] @ p["w_gate"]
+    win = jnp.concatenate([state["conv"], xb[:, None].astype(state["conv"].dtype)],
+                          axis=1)
+    xc = (win * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+    a, gated = _gates(p, xc)
+    h = a * state["h"] + gated
+    y = h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
+    out = (y @ p["w_out"])[:, None]
+    return out, {"h": h, "conv": win[:, 1:]}

@@ -1,0 +1,91 @@
+"""Rotary position embeddings: full, half (ChatGLM 2d), partial (StableLM),
+and M-RoPE (Qwen2-VL multimodal sections)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+MROPE_SECTIONS = (16, 24, 24)      # t/h/w sections of head_dim/2 (Qwen2-VL)
+
+
+def _rot_half(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _freqs(dim_half: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(dim_half, dtype=jnp.float32) / dim_half))
+
+
+def _cos_sin(positions: jax.Array, dim_half: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, dim_half)."""
+    ang = positions[..., None].astype(jnp.float32) * _freqs(dim_half, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, kind: str = "full",
+               theta: float = 10_000.0,
+               mrope_positions: Optional[jax.Array] = None) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32.
+
+    kind: full | half | partial25 | mrope | none
+    mrope_positions: (3, B, S) t/h/w position streams (Qwen2-VL M-RoPE);
+    the text-only stub uses t=h=w=positions.
+    """
+    if kind == "none":
+        return x
+    hd = x.shape[-1]
+    if kind == "full":
+        rot_dim = hd
+    elif kind == "half":
+        rot_dim = hd // 2
+    elif kind == "partial25":
+        rot_dim = hd // 4
+    elif kind == "mrope":
+        rot_dim = hd
+    else:
+        raise ValueError(kind)
+
+    if kind == "mrope":
+        if mrope_positions is None:
+            mrope_positions = jnp.broadcast_to(positions,
+                                               (3,) + positions.shape)
+        cos, sin = _mrope_cos_sin(mrope_positions, hd // 2, theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return _rot_half(x, cos.astype(x.dtype), sin.astype(x.dtype))
+
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    cos, sin = _cos_sin(positions, rot_dim // 2, theta)   # (B,S,rot/2)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]     # (B,S,1,rot/2)
+    xr = _rot_half(xr, cos.astype(x.dtype), sin.astype(x.dtype))
+    return jnp.concatenate([xr, xp], axis=-1) if rot_dim < hd else xr
+
+
+def _mrope_cos_sin(pos3: jax.Array, dim_half: int, theta: float):
+    """M-RoPE: frequency dims split into (t, h, w) sections; each section
+    rotates by its own position stream (arXiv:2409.12191 §2.1)."""
+    sections = MROPE_SECTIONS
+    total = sum(sections)
+    # scale sections to the actual dim_half
+    scaled = [max(int(round(s * dim_half / total)), 1) for s in sections]
+    scaled[-1] = dim_half - sum(scaled[:-1])
+    freqs = _freqs(dim_half, theta)
+    cos_parts, sin_parts = [], []
+    start = 0
+    for sec, p in zip(scaled, pos3):
+        f = freqs[start:start + sec]
+        ang = p[..., None].astype(jnp.float32) * f     # (B,S,sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    return jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal absolute embeddings (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

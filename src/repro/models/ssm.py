@@ -1,0 +1,211 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: the sequence is split into chunks; within a chunk the quadratic
+(attention-like) form runs on the MXU, across chunks a small recurrence
+carries the (H, P, N) state — this is the matmul-dominant formulation that
+makes the FlexNN schedule machinery applicable (DESIGN.md §5).
+
+Decode is the classic selective-state update: h ← a·h + dt·B·x, y = C·h.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.partition import shard
+
+Params = Dict[str, jax.Array]
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_ssd_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm.head_dim
+
+
+def init_ssm(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    h = n_ssd_heads(cfg)
+    g, n = cfg.ssm.n_groups, cfg.ssm.d_state
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    return {
+        # fused input projection: [x, z, B, C, dt]
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * g * n + h)) * s
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.d_conv, di + 2 * g * n))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * g * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di = d_inner(cfg)
+    g, n = cfg.ssm.n_groups, cfg.ssm.d_state
+    h = n_ssd_heads(cfg)
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    bc = zxbcdt[..., 2 * di:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, x, bc, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def ssd_forward(cfg: ArchConfig, params: Params, x_in: jax.Array
+                ) -> jax.Array:
+    """Full-sequence SSD.  x_in (B, S, D) -> (B, S, D)."""
+    b, s, _ = x_in.shape
+    di = d_inner(cfg)
+    h = n_ssd_heads(cfg)
+    g, n, p_hd = cfg.ssm.n_groups, cfg.ssm.d_state, cfg.ssm.head_dim
+    chunk = min(cfg.ssm.chunk, s)
+    nc = s // chunk
+
+    zxbcdt = x_in @ params["in_proj"]
+    z, xc, bc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xc, bc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xc, bc = xbc[..., :di], xbc[..., di:]
+    B = bc[..., :g * n].reshape(b, s, g, n)
+    C = bc[..., g * n:].reshape(b, s, g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                       # (H,)
+    xh = xc.reshape(b, s, h, p_hd)
+    xh = shard(xh, "batch", None, "heads", None)
+
+    # ---- chunked SSD ----
+    xch = xh.reshape(b, nc, chunk, h, p_hd)
+    Bch = B.reshape(b, nc, chunk, g, n)
+    Cch = C.reshape(b, nc, chunk, g, n)
+    dtc = dt.reshape(b, nc, chunk, h)
+    dA = dtc * A                                                        # (B,nc,c,H)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic within chunk, causal)
+    # decay(i,j) = exp(dA_cum[i] - dA_cum[j]) for i >= j
+    decay = jnp.exp(dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :])
+    ii, jj = jnp.triu_indices(chunk, k=1)
+    causal = jnp.ones((chunk, chunk), bool).at[jj, ii].set(False)
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    # scores (B,nc,c_i,c_j,H): C_i · B_j per head group
+    hpg = h // g
+    Cg = Cch[:, :, :, :, None, :]      # (b,nc,c,g,1,n)
+    Bg = Bch[:, :, :, :, None, :]
+    scores = jnp.einsum("bnigx,bnjgx->bnijg", Cch, Bch)                 # (b,nc,i,j,g)
+    scores = jnp.repeat(scores, hpg, axis=-1)                            # -> H
+    w = scores * decay * dtc[:, :, None, :, :]                           # weight x_j
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", w.astype(xh.dtype), xch)
+
+    # inter-chunk recurrence over states (B, H, P, N) per group
+    Bh = jnp.repeat(Bch, hpg, axis=3)                                    # (b,nc,c,H,n)
+    Ch = jnp.repeat(Cch, hpg, axis=3)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)                 # (b,nc,c,H)
+    state_in = jnp.einsum("bnch,bnchx,bnchp->bnhpx",
+                          (chunk_decay * dtc).astype(xh.dtype), Bh, xch)
+    total_decay = jnp.exp(dA_cum[:, :, -1, :])                           # (b,nc,H)
+
+    def scan_body(hstate, inp):
+        st, dec = inp
+        hstate = hstate * dec[:, :, None, None] + st
+        return hstate, hstate
+
+    init = jnp.zeros((b, h, p_hd, n), jnp.float32)
+    _, states = jax.lax.scan(
+        scan_body, init,
+        (jnp.moveaxis(state_in.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(total_decay, 1, 0)))
+    # states[k] = state AFTER chunk k; shift so chunk k sees state before it
+    states = jnp.concatenate([init[None], states[:-1]], axis=0)
+    states = jnp.moveaxis(states, 0, 1)                                  # (b,nc,H,P,N)
+    in_decay = jnp.exp(dA_cum)                                           # (b,nc,c,H)
+    y_inter = jnp.einsum("bnchx,bnhpx,bnch->bnchp",
+                         Ch, states.astype(xh.dtype), in_decay.astype(xh.dtype))
+
+    y = (y_intra + y_inter).reshape(b, s, h, p_hd)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, s, di)
+    # gated RMSNorm then output projection
+    y = _gated_norm(y, z, params["norm_scale"])
+    return y @ params["out_proj"]
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = (yf ** 2).mean(-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6) * scale).astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Params:
+    di = d_inner(cfg)
+    h = n_ssd_heads(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.ssm.head_dim, cfg.ssm.d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1,
+                           di + 2 * cfg.ssm.n_groups * cfg.ssm.d_state),
+                          dtype),
+    }
+
+
+def ssd_decode_step(cfg: ArchConfig, params: Params, x_in: jax.Array,
+                    state: Params) -> Tuple[jax.Array, Params]:
+    """x_in (B, 1, D); state {ssm (B,H,P,N), conv (B,K-1,C)}."""
+    b = x_in.shape[0]
+    di = d_inner(cfg)
+    h = n_ssd_heads(cfg)
+    g, n, p_hd = cfg.ssm.n_groups, cfg.ssm.d_state, cfg.ssm.head_dim
+
+    zxbcdt = x_in[:, 0] @ params["in_proj"]                   # (B, ...)
+    z, xc, bc, dt = _split_proj(cfg, zxbcdt[:, None, :])
+    xbc_new = jnp.concatenate([xc, bc], axis=-1)[:, 0]        # (B, C)
+    conv_win = jnp.concatenate([state["conv"], xbc_new[:, None]], axis=1)
+    w = params["conv_w"]
+    conv_out = (conv_win * w[None]).sum(axis=1) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xcv, bcv = xbc[..., :di], xbc[..., di:]
+    B = bcv[..., :g * n].reshape(b, g, n)
+    C = bcv[..., g * n:].reshape(b, g, n)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dtv * A)                                     # (B, H)
+    xh = xcv.reshape(b, h, p_hd)
+    hpg = h // g
+    Bh = jnp.repeat(B, hpg, axis=1)                           # (B,H,N)
+    Ch = jnp.repeat(C, hpg, axis=1)
+
+    new_state = state["ssm"] * da[:, :, None, None] \
+        + jnp.einsum("bh,bhp,bhx->bhpx", dtv, xh.astype(jnp.float32),
+                     Bh.astype(jnp.float32))
+    y = jnp.einsum("bhx,bhpx->bhp", Ch.astype(jnp.float32), new_state)
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x_in.dtype)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = y @ params["out_proj"]
+    return out, {"ssm": new_state, "conv": conv_win[:, 1:]}

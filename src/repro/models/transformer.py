@@ -1,0 +1,462 @@
+"""Decoder stacks (scan-over-layers) and the Whisper encoder-decoder.
+
+One init/apply/decode triple per layer *kind*:
+
+  dense  : attn + gated MLP              (yi, gemma, chatglm, stablelm, qwen2-vl)
+  moe    : attn + routed experts         (deepseek-moe, llama4-scout)
+  ssm    : Mamba-2 SSD block             (mamba2)
+  rec    : RG-LRU recurrent block + MLP  (recurrentgemma)
+  enc/dec: Whisper encoder / decoder layers
+
+Stacks scan over vmap-stacked layer weights (DESIGN.md D1): 80-layer models
+compile one layer body; roofline terms are corrected per-layer by the
+dry-run methodology.  Heterogeneous stacks decompose into homogeneous scans
+(leading dense layers for DeepSeek-MoE; (rec,rec,attn) groups + trailing rec
+layers for RecurrentGemma).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, moe as moe_mod, rglru, ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, init_mlp, init_norm)
+
+Params = Dict[str, jax.Array]
+
+
+def _stack_init(init_fn, rng, n: int):
+    """Stack n independently-initialized layer param trees along axis 0."""
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+# Dry-run hook (see models.unroll): small-L lowerings unroll every loop so
+# cost_analysis sees exact per-layer costs; production lowerings keep scans.
+from repro.models.unroll import maybe_unrolled_scan as _lax_scan, scan_unroll  # noqa: E402,F401
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)          # "full": save only layer inputs
+
+
+# ---------------------------------------------------------------------------
+# Layer kinds
+# ---------------------------------------------------------------------------
+
+def init_dense_layer(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model, dtype),
+        "attn": attention.init_attention(cfg, k1, dtype),
+        "ln2": init_norm(cfg, cfg.d_model, dtype),
+        "mlp": init_mlp(cfg, k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def apply_dense_layer(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                      positions: jax.Array, window: int = 0,
+                      mrope_positions=None, q_chunk: int = 512) -> jax.Array:
+    h = apply_norm(p["ln1"], cfg, x)
+    x = x + attention.attention_forward(
+        p["attn"], cfg, h, positions=positions, window=window,
+        mrope_positions=mrope_positions, q_chunk=q_chunk)
+    h = apply_norm(p["ln2"], cfg, x)
+    return x + apply_mlp(p["mlp"], cfg, h)
+
+
+def decode_dense_layer(p: Params, cfg: ArchConfig, x, cache, pos, *,
+                       window: int = 0):
+    h = apply_norm(p["ln1"], cfg, x)
+    o, cache = attention.decode_step(p["attn"], cfg, h, cache, pos,
+                                     window=window)
+    x = x + o
+    h = apply_norm(p["ln2"], cfg, x)
+    return x + apply_mlp(p["mlp"], cfg, h), cache
+
+
+def init_moe_layer(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model, dtype),
+        "attn": attention.init_attention(cfg, k1, dtype),
+        "ln2": init_norm(cfg, cfg.d_model, dtype),
+        "moe": moe_mod.init_moe(cfg, k2, dtype),
+    }
+
+
+def apply_moe_layer(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                    positions: jax.Array, q_chunk: int = 512,
+                    mrope_positions=None) -> jax.Array:
+    h = apply_norm(p["ln1"], cfg, x)
+    x = x + attention.attention_forward(
+        p["attn"], cfg, h, positions=positions, q_chunk=q_chunk,
+        mrope_positions=mrope_positions)
+    h = apply_norm(p["ln2"], cfg, x)
+    return x + moe_mod.apply_moe(p["moe"], cfg, h)
+
+
+def decode_moe_layer(p: Params, cfg: ArchConfig, x, cache, pos):
+    h = apply_norm(p["ln1"], cfg, x)
+    o, cache = attention.decode_step(p["attn"], cfg, h, cache, pos)
+    x = x + o
+    h = apply_norm(p["ln2"], cfg, x)
+    return x + moe_mod.apply_moe(p["moe"], cfg, h), cache
+
+
+def init_ssm_layer(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    return {
+        "ln1": init_norm(cfg, cfg.d_model, dtype),
+        "ssm": ssm_mod.init_ssm(cfg, rng, dtype),
+    }
+
+
+def apply_ssm_layer(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    h = apply_norm(p["ln1"], cfg, x)
+    return x + ssm_mod.ssd_forward(cfg, p["ssm"], h)
+
+
+def decode_ssm_layer(p: Params, cfg: ArchConfig, x, state):
+    h = apply_norm(p["ln1"], cfg, x)
+    o, state = ssm_mod.ssd_decode_step(cfg, p["ssm"], h, state)
+    return x + o, state
+
+
+def init_rec_layer(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model, dtype),
+        "rglru": rglru.init_rglru(cfg, k1, dtype),
+        "ln2": init_norm(cfg, cfg.d_model, dtype),
+        "mlp": init_mlp(cfg, k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def apply_rec_layer(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    h = apply_norm(p["ln1"], cfg, x)
+    x = x + rglru.rglru_forward(p["rglru"], cfg, h)
+    h = apply_norm(p["ln2"], cfg, x)
+    return x + apply_mlp(p["mlp"], cfg, h)
+
+
+def decode_rec_layer(p: Params, cfg: ArchConfig, x, state):
+    h = apply_norm(p["ln1"], cfg, x)
+    o, state = rglru.rglru_decode_step(p["rglru"], cfg, h, state)
+    x = x + o
+    h = apply_norm(p["ln2"], cfg, x)
+    return x + apply_mlp(p["mlp"], cfg, h), state
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous-stack assembly per family
+# ---------------------------------------------------------------------------
+
+def griffin_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_groups, n_trailing_rec) for the 1:2 attn:rec pattern."""
+    glen = len(cfg.rglru.block_pattern)     # 3 for (rec, rec, attn)
+    return cfg.n_layers // glen, cfg.n_layers % glen
+
+
+def init_griffin_group(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(rng, len(cfg.rglru.block_pattern))
+    group = {}
+    for i, (kind, k) in enumerate(zip(cfg.rglru.block_pattern, ks)):
+        init = init_rec_layer if kind == "rec" else init_dense_layer
+        group[f"b{i}_{kind}"] = init(cfg, k, dtype)
+    return group
+
+
+def apply_griffin_group(p: Params, cfg: ArchConfig, x, *, positions,
+                        q_chunk: int = 512) -> jax.Array:
+    for i, kind in enumerate(cfg.rglru.block_pattern):
+        lp = p[f"b{i}_{kind}"]
+        if kind == "rec":
+            x = apply_rec_layer(lp, cfg, x)
+        else:
+            x = apply_dense_layer(lp, cfg, x, positions=positions,
+                                  window=cfg.window, q_chunk=q_chunk)
+    return x
+
+
+def decode_griffin_group(p: Params, cfg: ArchConfig, x, state, pos):
+    new_state = {}
+    for i, kind in enumerate(cfg.rglru.block_pattern):
+        key = f"b{i}_{kind}"
+        if kind == "rec":
+            x, new_state[key] = decode_rec_layer(p[key], cfg, x, state[key])
+        else:
+            x, new_state[key] = decode_dense_layer(
+                p[key], cfg, x, state[key], pos, window=cfg.window)
+    return x, new_state
+
+
+def init_stack(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    """Stacked layer weights for the arch's family."""
+    if cfg.encoder_decoder:
+        k1, k2 = jax.random.split(rng)
+        return {
+            "encoder": _stack_init(
+                lambda r: init_dense_layer(cfg, r, dtype), k1, cfg.n_layers),
+            "decoder": _stack_init(
+                lambda r: init_whisper_dec_layer(cfg, r, dtype), k2,
+                cfg.n_layers),
+        }
+    if cfg.ssm.enabled:
+        return {"layers": _stack_init(
+            lambda r: init_ssm_layer(cfg, r, dtype), rng, cfg.n_layers)}
+    if cfg.rglru.enabled:
+        n_groups, n_trail = griffin_layout(cfg)
+        k1, k2 = jax.random.split(rng)
+        p = {"groups": _stack_init(
+            lambda r: init_griffin_group(cfg, r, dtype), k1, n_groups)}
+        if n_trail:
+            p["trailing"] = _stack_init(
+                lambda r: init_rec_layer(cfg, r, dtype), k2, n_trail)
+        return p
+    if cfg.moe.enabled:
+        n_moe = cfg.n_layers - cfg.moe.first_dense_layers
+        k1, k2 = jax.random.split(rng)
+        p = {"layers": _stack_init(
+            lambda r: init_moe_layer(cfg, r, dtype), k1, n_moe)}
+        if cfg.moe.first_dense_layers:
+            p["dense_layers"] = _stack_init(
+                lambda r: init_dense_layer(cfg, r, dtype), k2,
+                cfg.moe.first_dense_layers)
+        return p
+    return {"layers": _stack_init(
+        lambda r: init_dense_layer(cfg, r, dtype), rng, cfg.n_layers)}
+
+
+def apply_stack(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                positions: jax.Array, remat: str = "none",
+                q_chunk: int = 512, mrope_positions=None,
+                frames: Optional[jax.Array] = None) -> jax.Array:
+    """Run the full stack.  ``frames`` feeds the Whisper encoder."""
+    if cfg.encoder_decoder:
+        memory = encode(p, cfg, frames, remat=remat, q_chunk=q_chunk)
+        return _scan(p["decoder"],
+                     lambda lp, h: apply_whisper_dec_layer(
+                         lp, cfg, h, memory=memory, positions=positions,
+                         q_chunk=q_chunk),
+                     x, remat)
+    if cfg.ssm.enabled:
+        return _scan(p["layers"],
+                     lambda lp, h: apply_ssm_layer(lp, cfg, h), x, remat)
+    if cfg.rglru.enabled:
+        x = _scan(p["groups"],
+                  lambda lp, h: apply_griffin_group(
+                      lp, cfg, h, positions=positions, q_chunk=q_chunk),
+                  x, remat)
+        if "trailing" in p:
+            x = _scan(p["trailing"],
+                      lambda lp, h: apply_rec_layer(lp, cfg, h), x, remat)
+        return x
+    if cfg.moe.enabled:
+        if "dense_layers" in p:
+            x = _scan(p["dense_layers"],
+                      lambda lp, h: apply_dense_layer(
+                          lp, cfg, h, positions=positions, q_chunk=q_chunk),
+                      x, remat)
+        return _scan(p["layers"],
+                     lambda lp, h: apply_moe_layer(
+                         lp, cfg, h, positions=positions, q_chunk=q_chunk),
+                     x, remat)
+    return _scan(p["layers"],
+                 lambda lp, h: apply_dense_layer(
+                     lp, cfg, h, positions=positions, window=cfg.window,
+                     q_chunk=q_chunk, mrope_positions=mrope_positions),
+                 x, remat)
+
+
+def _scan(stacked: Params, body, x: jax.Array, remat: str) -> jax.Array:
+    fn = _remat(lambda h, lp: (body(lp, h), None), remat)
+    x, _ = _lax_scan(fn, x, stacked)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder-decoder specifics
+# ---------------------------------------------------------------------------
+
+def init_whisper_dec_layer(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model, dtype),
+        "attn": attention.init_attention(cfg, k1, dtype),
+        "lnx": init_norm(cfg, cfg.d_model, dtype),
+        "xattn": attention.init_attention(cfg, k2, dtype, cross=True),
+        "ln2": init_norm(cfg, cfg.d_model, dtype),
+        "mlp": init_mlp(cfg, k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def apply_whisper_dec_layer(p: Params, cfg: ArchConfig, x, *, memory,
+                            positions, q_chunk: int = 512) -> jax.Array:
+    h = apply_norm(p["ln1"], cfg, x)
+    x = x + attention.attention_forward(p["attn"], cfg, h,
+                                        positions=positions, causal=True,
+                                        q_chunk=q_chunk)
+    h = apply_norm(p["lnx"], cfg, x)
+    x = x + attention.attention_forward(p["xattn"], cfg, h,
+                                        positions=positions, causal=False,
+                                        kv_x=memory, q_chunk=q_chunk)
+    h = apply_norm(p["ln2"], cfg, x)
+    return x + apply_mlp(p["mlp"], cfg, h)
+
+
+def encode(p: Params, cfg: ArchConfig, frames: jax.Array, *,
+           remat: str = "none", q_chunk: int = 512) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    from repro.models.rope import sinusoidal_positions
+    b, s, d = frames.shape
+    x = frames + sinusoidal_positions(s, d).astype(frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return _scan(p["encoder"],
+                 lambda lp, h: _enc_layer(lp, cfg, h, positions, q_chunk),
+                 x, remat)
+
+
+def _enc_layer(lp: Params, cfg: ArchConfig, h: jax.Array,
+               positions: jax.Array, q_chunk: int = 512) -> jax.Array:
+    """Encoder layer: bidirectional self-attention + MLP."""
+    y = apply_norm(lp["ln1"], cfg, h)
+    h = h + attention.attention_forward(lp["attn"], cfg, y,
+                                        positions=positions, causal=False,
+                                        q_chunk=q_chunk)
+    y = apply_norm(lp["ln2"], cfg, h)
+    return h + apply_mlp(lp["mlp"], cfg, y)
+
+
+# ---------------------------------------------------------------------------
+# Decode over the stacked layers
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> Params:
+    """Stacked per-layer decode state (KV caches / SSM states / LRU states)."""
+    def stack(n, one):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if cfg.encoder_decoder:
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "self": stack(cfg.n_layers,
+                          attention.init_cache(cfg, batch, max_seq, dtype)),
+            # cross-attention memory (k/v per layer) filled by prefill
+            "memory": {
+                "k": jnp.zeros((cfg.n_layers, batch, max_seq, kvh, hd), dtype),
+                "v": jnp.zeros((cfg.n_layers, batch, max_seq, kvh, hd), dtype),
+            },
+        }
+    if cfg.ssm.enabled:
+        return {"layers": stack(cfg.n_layers,
+                                ssm_mod.init_ssm_state(cfg, batch))}
+    if cfg.rglru.enabled:
+        n_groups, n_trail = griffin_layout(cfg)
+        one_group = {}
+        for i, kind in enumerate(cfg.rglru.block_pattern):
+            key = f"b{i}_{kind}"
+            one_group[key] = (rglru.init_rglru_state(cfg, batch, dtype)
+                              if kind == "rec" else
+                              attention.init_cache(cfg, batch, max_seq, dtype))
+        st = {"groups": stack(n_groups, one_group)}
+        if n_trail:
+            st["trailing"] = stack(n_trail,
+                                   rglru.init_rglru_state(cfg, batch, dtype))
+        return st
+    st = {"layers": stack(cfg.n_layers - cfg.moe.first_dense_layers
+                          if cfg.moe.enabled else cfg.n_layers,
+                          attention.init_cache(cfg, batch, max_seq, dtype))}
+    if cfg.moe.enabled and cfg.moe.first_dense_layers:
+        st["dense_layers"] = stack(cfg.moe.first_dense_layers,
+                                   attention.init_cache(cfg, batch, max_seq,
+                                                        dtype))
+    return st
+
+
+def decode_stack(p: Params, cfg: ArchConfig, x: jax.Array, state: Params,
+                 pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """One-token step through the full stack.  x (B,1,D)."""
+    def scan_kind(params_s, state_s, step):
+        def body(h, inp):
+            lp, st = inp
+            h, st = step(lp, h, st)
+            return h, st
+        return _lax_scan(body, x, (params_s, state_s))
+
+    if cfg.encoder_decoder:
+        def body(h, inp):
+            lp, st, mem_k, mem_v = inp
+            y = apply_norm(lp["ln1"], cfg, h)
+            o, st = attention.decode_step(lp["attn"], cfg, y, st, pos)
+            h = h + o
+            y = apply_norm(lp["lnx"], cfg, h)
+            b = y.shape[0]
+            q = (y @ lp["xattn"]["wq"]).reshape(
+                b, 1, cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim)
+            o = attention.dense_attention(q, mem_k, mem_v, None)
+            h = h + o.reshape(b, 1, -1) @ lp["xattn"]["wo"]
+            y = apply_norm(lp["ln2"], cfg, h)
+            return h + apply_mlp(lp["mlp"], cfg, y), st
+        x_out, new_self = _lax_scan(
+            body, x, (p["decoder"], state["self"],
+                      state["memory"]["k"], state["memory"]["v"]))
+        return x_out, {"self": new_self, "memory": state["memory"]}
+
+    if cfg.ssm.enabled:
+        x_out, st = scan_kind(p["layers"], state["layers"],
+                              lambda lp, h, s: decode_ssm_layer(lp, cfg, h, s))
+        return x_out, {"layers": st}
+
+    if cfg.rglru.enabled:
+        def g_body(h, inp):
+            lp, st = inp
+            h, st = decode_griffin_group(lp, cfg, h, st, pos)
+            return h, st
+        x_out, gst = _lax_scan(g_body, x, (p["groups"], state["groups"]))
+        new = {"groups": gst}
+        if "trailing" in p:
+            def t_body(h, inp):
+                lp, st = inp
+                h, st = decode_rec_layer(lp, cfg, h, st)
+                return h, st
+            x_out, tst = _lax_scan(t_body, x_out,
+                                      (p["trailing"], state["trailing"]))
+            new["trailing"] = tst
+        return x_out, new
+
+    if cfg.moe.enabled:
+        new = {}
+        x_out = x
+        if "dense_layers" in p:
+            def d_body(h, inp):
+                lp, st = inp
+                h, st = decode_dense_layer(lp, cfg, h, st, pos)
+                return h, st
+            x_out, dst = _lax_scan(d_body, x_out,
+                                      (p["dense_layers"],
+                                       state["dense_layers"]))
+            new["dense_layers"] = dst
+        def m_body(h, inp):
+            lp, st = inp
+            h, st = decode_moe_layer(lp, cfg, h, st, pos)
+            return h, st
+        x_out, mst = _lax_scan(m_body, x_out, (p["layers"],
+                                                  state["layers"]))
+        new["layers"] = mst
+        return x_out, new
+
+    def body(h, inp):
+        lp, st = inp
+        h, st = decode_dense_layer(lp, cfg, h, st, pos, window=cfg.window)
+        return h, st
+    x_out, st = _lax_scan(body, x, (p["layers"], state["layers"]))
+    return x_out, {"layers": st}

@@ -1,0 +1,45 @@
+"""Scan-unroll hook shared by every sequential loop in the model substrate.
+
+XLA's ``cost_analysis`` counts a while-loop body **once** regardless of trip
+count, so scanned lowerings under-count FLOPs/bytes/collectives.  The
+roofline methodology (DESIGN.md D1, EXPERIMENTS.md §Roofline) therefore
+lowers *small* configs with every loop unrolled to measure exact per-layer
+cost slopes, while production lowerings keep the loops.
+
+Any model-level sequential loop (layer stacks, chunked-CE, online-softmax
+attention, microbatch grad-accum) must go through ``maybe_unrolled_scan`` so
+the dry-run's ``scan_unroll()`` context controls it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def scan_unroll(flag: bool = True):
+    prev = getattr(_state, "unroll", False)
+    _state.unroll = flag
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def unrolling() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+def maybe_unrolled_scan(body, init, xs, length=None):
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if unrolling() else 1)
+
+
+def maybe_unrolled_map(fn, xs):
+    """lax.map twin (lax.map has no unroll knob)."""
+    _, ys = maybe_unrolled_scan(lambda _, x: (None, fn(x)), None, xs)
+    return ys

@@ -1,0 +1,5 @@
+from repro.quant.quantize import (QuantizedLinear, dequantize_params,
+                                  quantize_params, quantize_weight)
+
+__all__ = ["QuantizedLinear", "dequantize_params", "quantize_params",
+           "quantize_weight"]

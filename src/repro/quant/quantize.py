@@ -1,0 +1,89 @@
+"""INT8 weight quantization for serving (FlexNN's native precision, §III-A).
+
+FlexNN executes INT8/U8 natively; edge deployment quantizes weights (and
+the paper's NNCF flow uses QAT INT8). Here the serving-side analogue:
+per-output-channel symmetric INT8 weights with f32 scales, halving (vs
+bf16) the weight HBM footprint and the TP-only decode working set — the
+resolution of the §Perf decode finding (72B weights at TP=16: 9 GiB bf16 →
+4.5 GiB int8, which fits beside the 32k KV cache).
+
+Matmul sites consume the quantized weights through
+``kernels.int8_matmul`` (Pallas: int8 tiles dequantized in-register next to
+the MXU) or its XLA twin (CPU tests / dry-run).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedLinear(NamedTuple):
+    """Per-output-channel symmetric int8 weight."""
+    q: jax.Array          # (K, N) int8
+    scale: jax.Array      # (N,) f32 — per output channel
+
+
+def quantize_weight(w: jax.Array) -> QuantizedLinear:
+    """(K, N) float → int8 + per-N scale (symmetric, round-to-nearest)."""
+    wf = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(wf), axis=0) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(wf / scale[None, :]), -127, 127).astype(jnp.int8)
+    return QuantizedLinear(q=q, scale=scale)
+
+
+def dequantize_weight(qw: QuantizedLinear, dtype=jnp.bfloat16) -> jax.Array:
+    return (qw.q.astype(jnp.float32) * qw.scale[None, :]).astype(dtype)
+
+
+# weight leaves that hold (in, out) matmul matrices — quantization targets
+_MATMUL_LEAF = re.compile(
+    r".*(wq|wkv|wo|w_in|w_gate|w_out|in_proj|out_proj|experts_in|"
+    r"experts_gate|experts_out|router)$")
+
+
+def _is_matmul_leaf(path: str, leaf) -> bool:
+    return bool(_MATMUL_LEAF.match(path)) and getattr(leaf, "ndim", 0) >= 2
+
+
+def quantize_params(params) -> Tuple[Dict, Dict]:
+    """Pytree → (same-structure tree with QuantizedLinear at matmul leaves,
+    stats dict). Embeddings/norms/vectors stay in their original dtype.
+
+    Stacked leaves (L, K, N) and expert leaves (E, K, N) quantize per
+    (leading..., N) channel via vmap over the leading dims.
+    """
+    stats = {"quantized_bytes": 0, "original_bytes": 0, "n_quantized": 0}
+
+    def qleaf(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        if not _is_matmul_leaf(path, leaf):
+            return leaf
+        q2 = quantize_weight
+        for _ in range(leaf.ndim - 2):
+            q2 = jax.vmap(q2)
+        out = q2(leaf)
+        stats["n_quantized"] += 1
+        stats["original_bytes"] += leaf.size * leaf.dtype.itemsize
+        stats["quantized_bytes"] += out.q.size + out.scale.size * 4
+        return out
+
+    return jax.tree_util.tree_map_with_path(qleaf, params), stats
+
+
+def dequantize_params(qparams, dtype=jnp.bfloat16):
+    """Inverse of quantize_params (QuantizedLinear leaves → dense)."""
+    def deq(leaf):
+        if isinstance(leaf, QuantizedLinear):
+            d = dequantize_weight
+            for _ in range(leaf.q.ndim - 2):
+                d = jax.vmap(lambda x, dt=dtype: dequantize_weight(x, dt))
+            if leaf.q.ndim == 2:
+                return dequantize_weight(leaf, dtype)
+            return d(leaf)
+        return leaf
+    return jax.tree_util.tree_map(
+        deq, qparams, is_leaf=lambda x: isinstance(x, QuantizedLinear))

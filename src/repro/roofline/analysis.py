@@ -1,0 +1,264 @@
+"""Three-term roofline analysis (deliverable (g)).
+
+Methodology (DESIGN.md D1): ``jax.lax.scan`` bodies are counted **once** by
+``cost_analysis()`` regardless of trip count, so the production lowering
+under-counts FLOPs/bytes/collectives.  We therefore lower *reduced-depth*
+variants of each cell with every model loop unrolled (``models.unroll``)
+at a small grid of structure points, fit the (exactly linear) cost model
+
+    metric(structure, n_micro) = φ(structure) ⊗ [1, m] · θ
+
+and evaluate it at the full depth / full microbatch count.  Linearity is
+exact: every layer (and every grad-accum microstep) lowers to an identical
+subgraph, so each metric is an affine function of the layer/micro counts.
+
+Structure features per family:
+    dense/ssm/whisper : φ = [1, L]            points L ∈ {1, 2}
+    moe (f dense)     : φ = [1, L_moe]        points L_moe ∈ {1, 2}
+    recurrentgemma    : φ = [1, groups, trail] points (1,0), (2,0), (1,2)
+
+Roofline terms per (arch × shape) on the single-pod mesh, per device:
+    compute_s    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+    memory_s     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective_s = collective wire bytes / ICI_bw  (50 GB/s/link; ring
+                   per-device traffic from the post-SPMD HLO)
+
+plus MODEL_FLOPS (6·N_active·tokens for train, 2·N_active·tokens for
+prefill/decode) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+# ---------------------------------------------------------------------------
+# Structure grids
+# ---------------------------------------------------------------------------
+
+def structure_points(cfg) -> Tuple[List[Tuple[object, List[float]]],
+                                   List[float]]:
+    """[(cfg_variant, φ)], φ_full — reduced-depth grid + full-depth features."""
+    if cfg.rglru.enabled:
+        glen = len(cfg.rglru.block_pattern)
+        n_groups, n_trail = divmod(cfg.n_layers, glen)
+        pts = [
+            (dataclasses.replace(cfg, n_layers=glen), [1.0, 1.0, 0.0]),
+            (dataclasses.replace(cfg, n_layers=2 * glen), [1.0, 2.0, 0.0]),
+        ]
+        if n_trail:
+            pts.append((dataclasses.replace(cfg, n_layers=glen + n_trail),
+                        [1.0, 1.0, 1.0]))
+        full = [1.0, float(n_groups), 1.0 if n_trail else 0.0]
+        return pts, full
+    if cfg.moe.enabled:
+        f = cfg.moe.first_dense_layers
+        pts = [
+            (dataclasses.replace(cfg, n_layers=f + 1), [1.0, 1.0]),
+            (dataclasses.replace(cfg, n_layers=f + 2), [1.0, 2.0]),
+        ]
+        return pts, [1.0, float(cfg.n_layers - f)]
+    pts = [
+        (dataclasses.replace(cfg, n_layers=1), [1.0, 1.0]),
+        (dataclasses.replace(cfg, n_layers=2), [1.0, 2.0]),
+    ]
+    return pts, [1.0, float(cfg.n_layers)]
+
+
+def micro_points(shape) -> Tuple[List[int], int]:
+    if shape.kind != "train" or shape.n_micro <= 1:
+        return [1], 1
+    return [1, 2], shape.n_micro
+
+
+METRICS = ("flops", "bytes", "transcendentals", "coll_operand", "coll_wire",
+           "coll_ag", "coll_ar", "coll_rs", "coll_a2a", "coll_perm")
+
+
+def lower_point(arch_id: str, shape_name: str, mesh, cfg_variant, m: int,
+                base_shape, flags=None) -> Dict[str, float]:
+    """Compile one unrolled reduced point; return its per-device metrics."""
+    from repro.launch.step_builders import build_cell_step, lower_cell
+    from repro.models.unroll import scan_unroll
+    from repro.roofline.hlo import parse_collectives
+
+    shape = dataclasses.replace(base_shape, n_micro=m)
+    step = build_cell_step(arch_id, shape_name, mesh, cfg=cfg_variant,
+                           shape=shape, flags=flags)
+    with scan_unroll(True):
+        lowered = lower_cell(step)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = parse_collectives(compiled.as_text(), mesh.devices.size)
+    kinds = coll.by_kind()
+
+    def kind(k, f):
+        return kinds.get(k, {}).get(f, 0.0)
+
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "coll_operand": coll.operand_bytes,
+        "coll_wire": coll.wire_bytes,
+        "coll_ag": kind("all-gather", "wire_bytes"),
+        "coll_ar": kind("all-reduce", "wire_bytes"),
+        "coll_rs": kind("reduce-scatter", "wire_bytes"),
+        "coll_a2a": kind("all-to-all", "wire_bytes"),
+        "coll_perm": kind("collective-permute", "wire_bytes"),
+    }
+
+
+def fit_and_extrapolate(points: List[Tuple[List[float], Dict[str, float]]],
+                        phi_full: List[float]) -> Dict[str, float]:
+    """Least-squares fit metric = φ·θ per metric; evaluate at φ_full."""
+    X = np.array([phi for phi, _ in points])
+    out = {}
+    for m in METRICS:
+        y = np.array([vals[m] for _, vals in points])
+        theta, *_ = np.linalg.lstsq(X, y, rcond=None)
+        out[m] = float(np.dot(phi_full, theta))
+    return out
+
+
+def model_flops_per_device(cfg, shape, n_devices: int) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+# ---------------------------------------------------------------------------
+# Per-cell analysis
+# ---------------------------------------------------------------------------
+
+def analyze_cell(arch_id: str, shape_name: str, out_dir: str,
+                 flags=None, shape_override=None,
+                 cfg_override=None, tag: str = "") -> Dict:
+    import jax  # noqa: F401 — devices already forced by the caller
+    from repro.configs.base import get_config
+    from repro.configs.cells import cell_shape, clamp_micro
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = cfg_override or get_config(arch_id)
+    base_shape = shape_override or cell_shape(arch_id, shape_name)
+    if base_shape.kind == "train":
+        base_shape = clamp_micro(base_shape, mesh.shape["data"])
+    # Coarsen the seq-chunk loops for the *unrolled* lowerings: totals
+    # (FLOPs / bytes / collectives) are chunking-invariant, but unrolling
+    # S/512 chunks of a 32k sequence explodes compile time.  ≤8 chunks keeps
+    # the unrolled graphs tractable; the production dry-run keeps the real
+    # chunk sizes.
+    coarse = max(base_shape.seq_len // 8, 512)
+    base_shape = dataclasses.replace(
+        base_shape, attn_chunk=max(base_shape.attn_chunk, coarse),
+        loss_chunk=max(base_shape.loss_chunk, coarse))
+
+    pts, phi_full = structure_points(cfg)
+    ms, m_full = micro_points(base_shape)
+
+    t0 = time.time()
+    measured = []
+    for cfg_v, phi in pts:
+        for m in ms:
+            vals = lower_point(arch_id, shape_name, mesh, cfg_v, m,
+                               base_shape, flags=flags)
+            feat = [p * mm for p in phi for mm in ([1.0, m] if len(ms) > 1
+                                                   else [1.0])]
+            measured.append((feat, vals))
+    phi_eval = [p * mm for p in phi_full
+                for mm in ([1.0, m_full] if len(ms) > 1 else [1.0])]
+    full = fit_and_extrapolate(measured, phi_eval)
+
+    n_dev = mesh.devices.size
+    mf = model_flops_per_device(cfg, base_shape, n_dev)
+    compute_s = full["flops"] / PEAK_FLOPS
+    memory_s = full["bytes"] / HBM_BW
+    coll_s = full["coll_wire"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    record = {
+        "arch": arch_id, "shape": shape_name, "tag": tag,
+        "devices": n_dev, "n_micro": base_shape.n_micro,
+        "metrics_per_device": full,
+        "terms": terms,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / full["flops"] if full["flops"] else 0.0,
+        "roofline_fraction": ((mf / PEAK_FLOPS) / bound_s) if bound_s else 0.0,
+        "points": [{"phi": f, **v} for f, v in measured],
+        "seconds": round(time.time() - t0, 1),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"@{tag}" if tag else ""
+    with open(os.path.join(out_dir, f"{arch_id}@{shape_name}{suffix}.json"),
+              "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/roofline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.base import (ARCH_IDS, SHAPES, get_config,
+                                    shape_applicable)
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES
+                 if shape_applicable(get_config(a), SHAPES[s])]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    for arch_id, shape_name in cells:
+        path = os.path.join(args.out, f"{arch_id}@{shape_name}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {arch_id}@{shape_name}")
+            continue
+        try:
+            r = analyze_cell(arch_id, shape_name, args.out)
+            t = r["terms"]
+            print(f"[ok] {arch_id}@{shape_name} "
+                  f"compute={t['compute_s']*1e3:.1f}ms "
+                  f"memory={t['memory_s']*1e3:.1f}ms "
+                  f"coll={t['collective_s']*1e3:.1f}ms "
+                  f"dom={r['dominant']} useful={r['useful_flops_ratio']:.2f} "
+                  f"roofline={r['roofline_fraction']:.2f} "
+                  f"({r['seconds']}s)", flush=True)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[FAIL] {arch_id}@{shape_name}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    import os as _os
+    _os.environ.setdefault("XLA_FLAGS",
+                           "--xla_force_host_platform_device_count=512")
+    main()

@@ -1,0 +1,180 @@
+"""HLO-text collective parser.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so the roofline
+collective term comes from parsing the post-SPMD optimized HLO
+(``compiled.as_text()``): every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, with operand bytes derived from the result
+shape and the replica-group size.
+
+Conventions (per-device bytes *sent*, the quantity a link carries):
+
+  op                  result→operand relation       ring wire factor
+  all-reduce          operand = result              2·(g-1)/g
+  all-gather          operand = result / g          (g-1)/g   (of result)
+  reduce-scatter      operand = result · g          (g-1)/g   (of operand)
+  all-to-all          operand = result              (g-1)/g
+  collective-permute  operand = result              1
+
+Two sums are reported: ``operand_bytes`` (the spec'd roofline input: raw
+operand sizes) and ``wire_bytes`` (ring-algorithm per-device traffic, used
+for the §Perf napkin math).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one result type: f32[16,128]{1,0}  (layout + optional sharding suffix)
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\(?[^=]*?\)?)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+
+    @property
+    def operand_bytes(self) -> float:
+        if self.kind == "all-gather":
+            return self.result_bytes / max(self.group_size, 1)
+        if self.kind == "reduce-scatter":
+            return self.result_bytes * self.group_size
+        return float(self.result_bytes)
+
+    @property
+    def wire_bytes(self) -> float:
+        """Per-device ring traffic."""
+        g = max(self.group_size, 1)
+        if g == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * self.result_bytes * (g - 1) / g
+        if self.kind == "all-gather":
+            return self.result_bytes * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return self.result_bytes * (g - 1)      # operand·(g-1)/g
+        if self.kind == "all-to-all":
+            return self.result_bytes * (g - 1) / g
+        return float(self.result_bytes)             # permute: one hop
+
+
+@dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def operand_bytes(self) -> float:
+        return sum(o.operand_bytes for o in self.ops)
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(o.wire_bytes for o in self.ops)
+
+    def by_kind(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+        for o in self.ops:
+            d = out[o.kind]
+            d["count"] += 1
+            d["operand_bytes"] += o.operand_bytes
+            d["wire_bytes"] += o.wire_bytes
+        return dict(out)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of one HLO type string (handles tuples)."""
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))              # [n_groups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return n_devices
+
+
+_F32_RESULT_RE = re.compile(r"=\s+f32\[([\d,]+)\]")
+
+
+def f32_upcast_bytes(hlo_text: str, min_bytes: int = 64 * 2**20) -> int:
+    """CPU-backend float-normalization inflation estimate.
+
+    XLA:CPU has no native bf16 dot, so FloatNormalization inserts
+    bf16→f32 converts; loop-invariant code motion then hoists whole-array
+    converts of scan-carried weights/caches out of the while loop,
+    materializing f32 copies that do not exist on the TPU target (native
+    bf16 MXU).  Heuristic: sum the sizes of every ≥``min_bytes`` f32
+    instruction result whose dims exactly match some bf16 type in the
+    module (i.e. it is an upcast twin, not a genuine f32 accumulator).
+    Used by the dry-run to report ``live_bytes_tpu_est`` alongside the raw
+    CPU-backend number (see EXPERIMENTS.md §Dry-run methodology).
+    """
+    bf16_dims = set(m.group(2) for m in _TYPE_RE.finditer(hlo_text)
+                    if m.group(1) == "bf16")
+    total = 0
+    for m in _F32_RESULT_RE.finditer(hlo_text):
+        dims = m.group(1)
+        if dims not in bf16_dims:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if n * 4 >= min_bytes:
+            total += n * 4
+    return total
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveSummary:
+    summary = CollectiveSummary()
+    seen_start: set = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+        elif kind in ("all-reduce", "all-gather", "collective-permute") \
+                and f"{kind}-done" in line:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        if result_bytes == 0:
+            continue
+        summary.ops.append(CollectiveOp(
+            kind=kind, result_bytes=result_bytes,
+            group_size=_group_size(line, n_devices)))
+    return summary

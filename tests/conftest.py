@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+multi-device behaviour is exercised in subprocesses (see helpers below)."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with N forced host devices."""
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "HOME": "/root"}
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout,
+                          cwd="/root/repo")
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout

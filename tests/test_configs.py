@@ -1,0 +1,97 @@
+"""Assigned-architecture configs must match the published dims exactly."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, get_smoke_config
+
+# (n_layers, d_model, n_heads, n_kv_heads, d_ff, vocab) from the assignment
+ASSIGNED = {
+    "qwen2-vl-72b":          (80, 8192, 64, 8, 29568, 152064),
+    "yi-9b":                 (48, 4096, 32, 4, 11008, 64000),
+    "gemma-2b":              (18, 2048, 8, 1, 16384, 256000),
+    "chatglm3-6b":           (28, 4096, 32, 2, 13696, 65024),
+    "stablelm-1.6b":         (24, 2048, 32, 32, 5632, 100352),
+    "whisper-tiny":          (4, 384, 6, 6, 1536, 51865),
+    "deepseek-moe-16b":      (28, 2048, 16, 16, None, 102400),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "recurrentgemma-9b":     (38, 4096, 16, 1, 12288, 256000),
+    "mamba2-1.3b":           (48, 2048, None, None, None, 50280),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_dims_match_assignment(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h
+        assert cfg.n_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+
+
+def test_moe_configs():
+    ds = get_config("deepseek-moe-16b").moe
+    assert (ds.n_experts, ds.n_shared, ds.top_k, ds.expert_d_ff) \
+        == (64, 2, 6, 1408)
+    l4 = get_config("llama4-scout-17b-a16e").moe
+    assert (l4.n_experts, l4.top_k, l4.expert_d_ff) == (16, 1, 8192)
+
+
+def test_family_flags():
+    assert get_config("mamba2-1.3b").ssm.d_state == 128
+    assert get_config("mamba2-1.3b").attn_free
+    assert get_config("recurrentgemma-9b").rglru.block_pattern \
+        == ("rec", "rec", "attn")
+    assert get_config("whisper-tiny").encoder_decoder
+    assert get_config("qwen2-vl-72b").rope == "mrope"
+    assert get_config("chatglm3-6b").rope == "half"
+    assert get_config("gemma-2b").act == "gelu"           # GeGLU
+    assert get_config("gemma-2b").head_dim == 256
+    # sub-quadratic flags drive long_500k applicability
+    subq = [a for a in ARCH_IDS if get_config(a).subquadratic]
+    assert set(subq) == {"recurrentgemma-9b", "mamba2-1.3b"}
+
+
+def test_assigned_shape_set():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_configs_are_reduced_same_family(arch):
+    full, smoke = get_config(arch), get_smoke_config(arch)
+    assert smoke.n_layers <= 6
+    assert smoke.d_model <= 128
+    assert smoke.vocab <= 1024
+    assert smoke.moe.enabled == full.moe.enabled
+    assert smoke.ssm.enabled == full.ssm.enabled
+    assert smoke.rglru.enabled == full.rglru.enabled
+    assert smoke.encoder_decoder == full.encoder_decoder
+
+
+def test_cells_iteration():
+    from repro.configs.base import cells
+    all_cells = list(cells())
+    assert len(all_cells) == 32            # 10×3 + 2 long_500k
+    assert ("mamba2-1.3b", "long_500k") in all_cells
+    assert ("yi-9b", "long_500k") not in all_cells
+    assert len(list(cells(include_skipped=True))) == 40
+
+
+def test_cell_overrides_resolve():
+    from repro.configs.cells import cell_flags, cell_shape, clamp_micro
+    s = cell_shape("qwen2-vl-72b", "train_4k")
+    assert s.n_micro == 16
+    f = cell_flags("qwen2-vl-72b", "decode_32k")
+    assert f.seq_shard and f.fsdp
+    # clamp keeps microbatches shardable over dp
+    c = clamp_micro(s, dp=32)
+    assert (s.global_batch // c.n_micro) % 32 == 0

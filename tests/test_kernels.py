@@ -1,0 +1,161 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.scheduler import MatmulSchedule
+from repro.core.sparsity import build_block_sparse_meta, prune_magnitude
+from repro.kernels import ref
+from repro.kernels.block_sparse import block_sparse_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flex_matmul import flex_matmul
+
+TOL = dict(rtol=2e-5, atol=2e-4)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _mats(rng, m, k, n, dtype):
+    a = rng.normal(size=(m, k)).astype(dtype)
+    b = rng.normal(size=(k, n)).astype(dtype)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+# ---------------------------------------------------------------------------
+# flex_matmul: stationarity × shape × dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stationarity", ["output", "weight", "input"])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 512),
+                                   (96, 200, 130), (64, 1024, 64)])
+def test_flex_matmul_vs_oracle(rng, stationarity, shape):
+    m, k, n = shape
+    a, b = _mats(rng, m, k, n, np.float32)
+    sched = MatmulSchedule(stationarity=stationarity, bm=128, bn=128, bk=128)
+    out = flex_matmul(a, b, schedule=sched, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.matmul_ref(a, b)), **TOL)
+
+
+@pytest.mark.parametrize("blocks", [(64, 64, 64), (128, 256, 128),
+                                    (32, 128, 64)])
+def test_flex_matmul_block_shapes(rng, blocks):
+    bm, bn, bk = blocks
+    a, b = _mats(rng, 256, 256, 256, np.float32)
+    for st in ("output", "weight", "input"):
+        sched = MatmulSchedule(stationarity=st, bm=bm, bn=bn, bk=bk)
+        out = flex_matmul(a, b, schedule=sched, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.matmul_ref(a, b)), **TOL)
+
+
+def test_flex_matmul_bf16(rng):
+    a, b = _mats(rng, 256, 256, 256, np.float32)
+    a, b = a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    out = flex_matmul(a, b, interpret=True)
+    expect = ref.matmul_ref(a, b).astype(jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(expect, dtype=np.float32),
+                               **BF16_TOL)
+
+
+def test_flex_matmul_default_schedule(rng):
+    a, b = _mats(rng, 200, 300, 100, np.float32)
+    out = flex_matmul(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.matmul_ref(a, b)), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# block_sparse_matmul: two-sided CSB skipping
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sp", [0.0, 0.3, 0.6, 0.9])
+def test_block_sparse_vs_dense(rng, sp):
+    m = k = n = 256
+    bm = bk = bn = 64
+    a = prune_magnitude(rng.normal(size=(m, k)).astype(np.float32), sp,
+                        block=(bm, bk))
+    b = prune_magnitude(rng.normal(size=(k, n)).astype(np.float32), sp,
+                        block=(bk, bn))
+    meta = build_block_sparse_meta(a, b, bm, bk, bn)
+    out = block_sparse_matmul(jnp.asarray(a), jnp.asarray(b), meta,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out), a @ b, **TOL)
+    # exact bitmaps -> the skip is lossless AND the skip rate tracks sparsity
+    if sp >= 0.6:
+        assert meta.skip_fraction > 0.3
+
+
+def test_block_sparse_ref_matches_kernel(rng):
+    a = prune_magnitude(rng.normal(size=(128, 256)).astype(np.float32), 0.5,
+                        block=(64, 64))
+    b = prune_magnitude(rng.normal(size=(256, 128)).astype(np.float32), 0.5,
+                        block=(64, 64))
+    meta = build_block_sparse_meta(a, b, 64, 64, 64)
+    out_k = block_sparse_matmul(jnp.asarray(a), jnp.asarray(b), meta,
+                                interpret=True)
+    out_r = ref.block_sparse_matmul_ref(jnp.asarray(a), jnp.asarray(b), meta)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), **TOL)
+
+
+def test_block_sparse_skips_with_coarse_bitmaps(rng):
+    """Inexact (externally supplied) bitmaps: skipped blocks contribute 0."""
+    a = rng.normal(size=(128, 128)).astype(np.float32)
+    b = rng.normal(size=(128, 128)).astype(np.float32)
+    a_bm = np.array([[True, False], [True, True]])
+    b_bm = np.array([[True, True], [False, True]])
+    meta = build_block_sparse_meta(a, b, 64, 64, 64,
+                                   a_bitmap=a_bm, b_bitmap=b_bm)
+    out = block_sparse_matmul(jnp.asarray(a), jnp.asarray(b), meta,
+                              interpret=True)
+    expect = ref.block_sparse_matmul_ref(jnp.asarray(a), jnp.asarray(b), meta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: causal / window / decode-offset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(4, 256, 64), (8, 512, 128), (2, 128, 32)])
+def test_flash_attention_vs_oracle(rng, causal, shape):
+    bh, s, hd = shape
+    q, k, v = (jnp.asarray(rng.normal(size=(bh, s, hd)).astype(np.float32))
+               for _ in range(3))
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **TOL)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_window(rng, window):
+    q, k, v = (jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+               for _ in range(3))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **TOL)
+
+
+def test_flash_attention_decode_offset(rng):
+    """sq < skv: queries are the *last* sq positions (decode/suffix case)."""
+    q = jnp.asarray(rng.normal(size=(4, 128, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **TOL)
+
+
+def test_flash_block_skip_equals_full_compute(rng):
+    """Block-level mask skipping (the CSB idea on the structural mask) must
+    be exact: compare small-block vs single-block lowering."""
+    q, k, v = (jnp.asarray(rng.normal(size=(2, 256, 64)).astype(np.float32))
+               for _ in range(3))
+    out_small = flash_attention(q, k, v, causal=True, bq=64, bkv=64,
+                                interpret=True)
+    out_big = flash_attention(q, k, v, causal=True, bq=256, bkv=256,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out_small), np.asarray(out_big),
+                               rtol=1e-4, atol=1e-4)

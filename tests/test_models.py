@@ -1,0 +1,208 @@
+"""Per-arch smoke + decode-vs-forward consistency integration tests."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models import model as M
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)).astype(np.float32) * 0.02)
+    if cfg.frontend == "vision":
+        nv = M.n_vis(cfg, s)
+        batch["vis_embeds"] = jnp.asarray(
+            rng.normal(size=(b, nv, cfg.d_model)).astype(np.float32) * 0.02)
+        batch["mrope_positions"] = jnp.zeros((3, b, s), jnp.int32) \
+            + jnp.arange(s, dtype=jnp.int32)[None, None]
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_grad(arch):
+    """Reduced config: one forward + one grad step, finite everywhere."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = _batch(cfg)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: M.train_loss(p, cfg, batch, loss_chunk=16, q_chunk=16)
+    )(params)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    leaves = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in leaves)
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    out = M.prefill(params, cfg, batch, q_chunk=16)
+    if cfg.encoder_decoder:
+        assert out.shape == (b, 1, cfg.d_model)
+    else:
+        assert out.shape == (b, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(out, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    b, max_seq = 2, 32
+    state = M.init_decode_state(cfg, b, max_seq, dtype=jnp.float32)
+    toks = jnp.ones((b, 1), jnp.int32)
+    logits, state2 = M.decode_step(params, cfg, toks, state,
+                                   jnp.asarray(0, jnp.int32))
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32)))
+    # state structure is preserved (scan round-trips)
+    assert jax.tree.structure(state) == jax.tree.structure(state2)
+
+
+DENSE_ARCHS = ["yi-9b", "gemma-2b", "chatglm3-6b", "stablelm-1.6b"]
+
+
+@pytest.mark.parametrize("arch", DENSE_ARCHS + ["mamba2-1.3b",
+                                                "recurrentgemma-9b",
+                                                "deepseek-moe-16b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forcing equivalence: token-by-token decode logits == the
+    full-sequence forward logits at every position (the strongest cache /
+    recurrence correctness check; for SSM it validates chunked-SSD == the
+    stepwise recurrence).
+
+    Tolerances: SSD's intra-chunk exp(Δcumsum) vs the stepwise exp-product
+    drift ~0.2 % per layer in f32 (chunk=1 is bit-exact — verified in
+    test_ssd_chunk_sizes); MoE needs a capacity bump so forward-vs-decode
+    dispatch drops don't differ (capacity competition is per-call)."""
+    cfg = get_smoke_config(arch)
+    tol = dict(rtol=2e-3, atol=2e-3)
+    if cfg.ssm.enabled:
+        tol = dict(rtol=2e-1, atol=2e-1)
+    if cfg.moe.enabled:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = M.init_params(cfg, jax.random.PRNGKey(1), dtype=jnp.float32)
+    b, s = 2, 16
+    toks = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab, (b, s)), jnp.int32)
+
+    # full forward logits at each position
+    batch = {"tokens": toks}
+    hidden = M.forward_hidden(params, cfg, batch, q_chunk=s)
+    from repro.models.layers import logits_head
+    full = logits_head(cfg, M.head_matrix(params, cfg), hidden)
+
+    # token-by-token decode
+    state = M.init_decode_state(cfg, b, s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, state = M.decode_step(params, cfg, toks[:, t:t + 1], state,
+                                  jnp.asarray(t, jnp.int32))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), **tol)
+
+
+def test_ssd_chunk_sizes_exact_at_one():
+    """chunk=1 SSD must equal the stepwise recurrence bit-for-bit; larger
+    chunks drift only by f32 exp/cumsum noise."""
+    import jax.random as jr
+    from repro.models import ssm as S
+    cfg = get_smoke_config("mamba2-1.3b")
+    p = S.init_ssm(cfg, jr.PRNGKey(0), dtype=jnp.float32)
+    b, s = 1, 8
+    x = jr.normal(jr.PRNGKey(2), (b, s, cfg.d_model)) * 0.5
+    st = S.init_ssm_state(cfg, b)
+    ys = []
+    for t in range(s):
+        yt, st = S.ssd_decode_step(cfg, p, x[:, t:t + 1], st)
+        ys.append(yt[:, 0])
+    y_dec = jnp.stack(ys, 1)
+    cfg1 = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=1))
+    assert float(jnp.abs(S.ssd_forward(cfg1, p, x) - y_dec).max()) < 1e-5
+    cfg8 = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=8))
+    assert float(jnp.abs(S.ssd_forward(cfg8, p, x) - y_dec).max()) < 5e-3
+
+
+def test_sliding_window_masks_old_tokens():
+    """Windowed attention must ignore tokens older than the window."""
+    cfg = dataclasses.replace(get_smoke_config("recurrentgemma-9b"))
+    assert cfg.window
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    b, s = 1, 8 + cfg.window
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, cfg.vocab, (b, s))
+    t2 = t1.copy()
+    t2[:, 0] = (t2[:, 0] + 1) % cfg.vocab      # perturb a token beyond window
+    h1 = M.forward_hidden(params, cfg, {"tokens": jnp.asarray(t1, jnp.int32)},
+                          q_chunk=s)
+    h2 = M.forward_hidden(params, cfg, {"tokens": jnp.asarray(t2, jnp.int32)},
+                          q_chunk=s)
+    # last position: the perturbed token is outside every layer's window for
+    # attention, but the RG-LRU recurrence legitimately carries state — so
+    # compare only that attention-visible change is bounded, not exploding.
+    d_last = float(jnp.abs(h1[:, -1] - h2[:, -1]).max())
+    d_first = float(jnp.abs(h1[:, 1] - h2[:, 1]).max())
+    assert d_last < d_first * 10 + 1e-3
+
+
+def test_chunked_ce_matches_dense_ce():
+    cfg = get_smoke_config("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = _batch(cfg, b=2, s=32)
+    from repro.models.layers import chunked_softmax_xent
+    x = M.forward_hidden(params, cfg, batch, q_chunk=16)
+    head = M.head_matrix(params, cfg)
+    chunked = chunked_softmax_xent(cfg, head, x, batch["labels"], chunk=8)
+    logits = jnp.einsum("bsd,vd->bsv", x, head).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.take_along_axis(logits, batch["labels"][..., None], -1)[..., 0]
+    dense = jnp.mean(lse - lab)
+    np.testing.assert_allclose(float(chunked), float(dense), rtol=1e-5)
+
+
+def test_mrope_changes_qwen_output():
+    cfg = get_smoke_config("qwen2-vl-72b")
+    assert cfg.rope == "mrope"
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    b, s = 1, 16
+    batch = _batch(cfg, b, s)
+    h1 = M.forward_hidden(params, cfg, batch, q_chunk=s)
+    b2 = dict(batch)
+    b2["mrope_positions"] = batch["mrope_positions"] * 2
+    h2 = M.forward_hidden(params, cfg, b2, q_chunk=s)
+    assert float(jnp.abs(h1 - h2).max()) > 1e-5
+
+
+def test_param_count_plausible():
+    """Full-config param counts are in the advertised ballpark."""
+    from repro.configs.base import get_config
+    expect = {"yi-9b": (7e9, 11e9), "gemma-2b": (2e9, 3.5e9),
+              "chatglm3-6b": (5e9, 8e9), "stablelm-1.6b": (1.2e9, 2.2e9),
+              "mamba2-1.3b": (1.0e9, 1.8e9),
+              "deepseek-moe-16b": (14e9, 20e9),
+              "recurrentgemma-9b": (7e9, 12e9),
+              "qwen2-vl-72b": (60e9, 80e9),
+              "llama4-scout-17b-a16e": (90e9, 120e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active < total
+    for arch in ("deepseek-moe-16b", "llama4-scout-17b-a16e"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()

@@ -1,0 +1,76 @@
+"""RoPE variants: rotation invariants per kind."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import rope
+
+
+def _x(b=2, s=8, h=4, hd=64, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, s, h, hd))
+
+
+@pytest.mark.parametrize("kind", ["full", "half", "partial25"])
+def test_rope_preserves_norm(kind):
+    x = _x()
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = rope.apply_rope(x, pos, kind=kind)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_position_zero_identity():
+    x = _x()
+    pos = jnp.zeros((2, 8), jnp.int32)
+    y = rope.apply_rope(x, pos, kind="full")
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_rope_relative_property():
+    """RoPE encodes relative position: <q_m, k_n> depends only on m-n."""
+    hd = 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def dot_at(m, n):
+        qm = rope.apply_rope(q, jnp.asarray([[m]]), kind="full")
+        kn = rope.apply_rope(k, jnp.asarray([[n]]), kind="full")
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+def test_half_rope_rotates_half_only():
+    x = _x()
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = rope.apply_rope(x, pos, kind="half")
+    hd = x.shape[-1]
+    # second half of head dim passes through untouched (chatglm 2d rope)
+    np.testing.assert_allclose(np.asarray(x[..., hd // 2:]),
+                               np.asarray(y[..., hd // 2:]), atol=1e-6)
+    assert float(jnp.abs(x[..., :hd // 2] - y[..., :hd // 2]).max()) > 1e-3
+
+
+def test_mrope_sections_follow_streams():
+    """M-RoPE: the three position streams drive disjoint dim sections."""
+    b, s, h, hd = 1, 6, 2, 64
+    x = _x(b, s, h, hd)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    same = jnp.stack([pos, pos, pos])                 # all streams = text pos
+    y_same = rope.apply_rope(x, pos, kind="mrope", mrope_positions=same)
+    y_full = rope.apply_rope(x, pos, kind="full")
+    np.testing.assert_allclose(np.asarray(y_same), np.asarray(y_full),
+                               atol=1e-5)
+    # perturbing one stream changes the output
+    diff = same.at[1].set(same[1] * 3)
+    y_diff = rope.apply_rope(x, pos, kind="mrope", mrope_positions=diff)
+    assert float(jnp.abs(y_diff - y_same).max()) > 1e-4
+
+
+def test_sinusoidal_positions_shape():
+    e = rope.sinusoidal_positions(16, 64)
+    assert e.shape == (16, 64)
+    assert float(jnp.abs(e).max()) <= 1.0
