@@ -12,10 +12,12 @@ from repro.core.flextree import (
     flextree_speedup_vs_fixed, link_bytes, neighbor_chain_cycles, reduce_psum,
 )
 from repro.core.sparsity import (
-    BlockSparseMeta, block_bitmap, build_block_sparse_meta, combined_bitmap,
-    csb_popcount, prune_magnitude, simulate_pe_cycles, zvc_decode,
-    zvc_decode_np, zvc_encode, zvc_encode_np,
+    BlockSparseMeta, block_bitmap, block_bitmap_jnp, build_block_sparse_meta,
+    build_block_sparse_meta_jnp, combined_bitmap, csb_popcount,
+    prune_magnitude, simulate_pe_cycles, zvc_decode, zvc_decode_np,
+    zvc_encode, zvc_encode_np,
 )
 from repro.core.descriptors import (
     NetworkSchedule, SiteDescriptor, compile_network_schedule, matmul_sites,
+    sparsity_densities_for, sparsity_mode_for,
 )

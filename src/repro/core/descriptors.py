@@ -16,6 +16,23 @@ schedule optimizer per site.  The result is consumed by ``kernels.ops`` (on
 the Pallas path) and recorded in the dry-run metadata so the chosen dataflow
 per layer is observable — the software-visible analogue of FlexNN's
 descriptor registers.
+
+Dispatch contract (descriptor → ops → block_sparse):
+
+  * ``SiteDescriptor.sparsity_mode`` is derived from ``ArchConfig.sparsity``
+    (see ``sparsity_mode_for``) and co-optimized with stationarity — the
+    schedule search discounts HBM traffic and FLOPs by the ZVC/CSB skip
+    fractions, so a sparse site may pick a different dataflow than its dense
+    twin.
+  * ``kernels.ops.flex_matmul`` consults the active ``ExecConfig.schedules``
+    by site name: ``dense`` sites run the schedule-flexible dense matmul;
+    ``weight``/``two_sided`` sites route through the block-sparse path at
+    the schedule's (bm, bk, bn) granularity — CSB metadata is built at trace
+    time from the operand block bitmaps (weight mode: activation bitmap all
+    ones), then executed by ``kernels.block_sparse`` on the Pallas path or
+    its masked-XLA oracle on CPU.  Bitmaps derived from the data make every
+    mode numerically identical to dense — zero blocks are *skipped*, never
+    approximated.
 """
 from __future__ import annotations
 
@@ -101,19 +118,50 @@ def matmul_sites(cfg: ArchConfig, shape: ShapeConfig,
     return sites
 
 
+def sparsity_mode_for(cfg: ArchConfig) -> str:
+    """ArchConfig.sparsity → sparsity_mode (the §III-D capability ladder).
+
+    weight sparsity alone → ``weight`` (FL-side skipping only); an
+    activation threshold (with or without pruned weights) → ``two_sided``
+    (CSB = IF ∧ FL — a dense FL bitmap degenerates to IF-side skipping).
+    """
+    sp = cfg.sparsity
+    if sp.activation_threshold > 0.0:
+        return "two_sided"
+    if sp.weight_sparsity > 0.0:
+        return "weight"
+    return "dense"
+
+
+def sparsity_densities_for(cfg: ArchConfig) -> Tuple[float, float]:
+    """(act_density, wt_density) estimates for schedule costing.
+
+    wt_density is exactly the unpruned fraction; act_density under a
+    threshold uses the ReLU-ish half-live prior (§II-B) — runtime bitmaps
+    refine it, the scheduler only needs the expectation.
+    """
+    sp = cfg.sparsity
+    wt = 1.0 - sp.weight_sparsity
+    act = 0.5 if sp.activation_threshold > 0.0 else 1.0
+    return act, wt
+
+
 def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
                              model_shards: int = 1,
                              contraction_axis: str = "model",
                              hw: TPUHardware = TPU_V5E) -> NetworkSchedule:
     """The compiler pass: optimal schedule per site (§III-A role)."""
     ns = NetworkSchedule(arch=cfg.name, shape=shape.name)
-    spars = ("two_sided" if cfg.sparsity.enabled else "dense")
+    spars = sparsity_mode_for(cfg)
+    act_d, wt_d = sparsity_densities_for(cfg)
     for site, m, n, k in matmul_sites(cfg, shape, model_shards):
         # FlexTree decision: partition the contraction if K is large and the
         # site's weight is K-sharded (attn.out / mlp.out style sites).
         k_sharded = site.endswith(".out") or site.endswith("out_proj")
         ic_p = model_shards if (k_sharded and model_shards > 1) else 1
-        sched = select_matmul_schedule(m, n, k, hw=hw, ic_p=ic_p)
+        sched = select_matmul_schedule(m, n, k, hw=hw, ic_p=ic_p,
+                                       sparsity_mode=spars,
+                                       act_density=act_d, wt_density=wt_d)
         payload = m * n * 4.0     # f32 psums
         strat = best_strategy(payload, ic_p, consumer_sharded=False)
         ns.sites[site] = SiteDescriptor(

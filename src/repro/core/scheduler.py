@@ -221,7 +221,11 @@ TPU_V5E = TPUHardware()
 @dataclass(frozen=True)
 class MatmulSchedule:
     """Stationarity + blocking for one matmul site: the FlexNN schedule
-    descriptor lowered to Pallas BlockSpec terms (DESIGN.md §2 table)."""
+    descriptor lowered to Pallas BlockSpec terms (DESIGN.md §2 table).
+
+    ``sparsity_mode`` records the skip capability the schedule was costed
+    under (dense | weight | two_sided); ``hbm_bytes``/``flops`` already carry
+    the ZVC/CSB discounts for that mode."""
     stationarity: str          # 'output' | 'weight' | 'input'
     bm: int
     bn: int
@@ -229,6 +233,7 @@ class MatmulSchedule:
     ic_p: int = 1              # contraction partition across mesh axis
     hbm_bytes: float = 0.0
     flops: float = 0.0
+    sparsity_mode: str = "dense"
 
     @property
     def grid_order(self) -> Tuple[str, ...]:
@@ -242,9 +247,14 @@ class MatmulSchedule:
 
 def _mm_hbm_bytes(m: int, n: int, k: int, bm: int, bn: int, bk: int,
                   stat: str, in_bytes: int = 2, out_bytes: int = 2,
-                  acc_bytes: int = 4) -> float:
+                  acc_bytes: int = 4, a_scale: float = 1.0,
+                  b_scale: float = 1.0) -> float:
     """HBM traffic for a tiled matmul under a stationarity choice — the same
-    refetch counting as ``energy_model`` with VMEM playing the RF role."""
+    refetch counting as ``energy_model`` with VMEM playing the RF role.
+
+    ``a_scale``/``b_scale`` discount operand fetches for ZVC-compressed
+    sparse operands (density + the 1 bit/element bitmap overhead); psum/
+    output traffic is never discounted (results are dense)."""
     tm, tn, tk = -(-m // bm), -(-n // bn), -(-k // bk)
     a_tile, b_tile, o_tile = bm * bk * in_bytes, bk * bn * in_bytes, bm * bn
     if stat == "output":          # loops m>n>k : A refetched per n, B per m
@@ -261,19 +271,49 @@ def _mm_hbm_bytes(m: int, n: int, k: int, bm: int, bn: int, bk: int,
         b_reads = tm * tk * tn * b_tile
         spills = (tk - 1) * m * n * acc_bytes * 2
         o_traffic = m * n * out_bytes + spills
-    return a_reads + b_reads + o_traffic
+    return a_reads * a_scale + b_reads * b_scale + o_traffic
+
+
+def _sparsity_scales(sparsity_mode: str, act_density: float,
+                     wt_density: float, in_bytes: int
+                     ) -> Tuple[float, float, float]:
+    """(a_scale, b_scale, flop_scale) for a sparsity capability.
+
+    ZVC-compressed fetches cost density + 1 bit/element bitmap (§IV); MACs
+    scale with the surviving-pair fraction — wt_density for weight-sided
+    skipping, act·wt (the expected CSB popcount of Fig 13) for two-sided.
+    """
+    bitmap = 1.0 / (8.0 * in_bytes)
+    if sparsity_mode == "weight":
+        return 1.0, min(1.0, wt_density + bitmap), wt_density
+    if sparsity_mode == "two_sided":
+        return (min(1.0, act_density + bitmap),
+                min(1.0, wt_density + bitmap),
+                act_density * wt_density)
+    return 1.0, 1.0, 1.0
 
 
 def select_matmul_schedule(m: int, n: int, k: int, *,
                            hw: TPUHardware = TPU_V5E,
                            in_bytes: int = 2,
-                           ic_p: int = 1) -> MatmulSchedule:
+                           ic_p: int = 1,
+                           sparsity_mode: str = "dense",
+                           act_density: float = 1.0,
+                           wt_density: float = 1.0) -> MatmulSchedule:
     """Pick (stationarity, bm, bn, bk) minimizing HBM traffic s.t. VMEM.
 
     This is FlexNN's per-layer schedule selection re-targeted at the TPU
     memory hierarchy; consumed by ``kernels.ops.flex_matmul``.
+
+    Stationarity × sparsity are co-optimized: under ``weight``/``two_sided``
+    modes the operand fetch traffic and MAC count are discounted by the ZVC/
+    CSB skip fractions before the argmin, so a sparse weight tilts the choice
+    away from weight-stationary reuse (the B operand is cheap to refetch when
+    most of its blocks are dead) — the Flexagon/Eyeriss-v2 co-design point.
     """
     best: Optional[MatmulSchedule] = None
+    a_scale, b_scale, flop_scale = _sparsity_scales(
+        sparsity_mode, act_density, wt_density, in_bytes)
     blocks = (128, 256, 512, 1024)
     for stat in ("output", "weight", "input"):
         for bm in blocks:
@@ -291,12 +331,14 @@ def select_matmul_schedule(m: int, n: int, k: int, *,
                     if vmem > hw.vmem_bytes:
                         continue
                     bytes_ = _mm_hbm_bytes(m, n, -(-k // ic_p), cbm, cbn, cbk,
-                                           stat, in_bytes)
+                                           stat, in_bytes, a_scale=a_scale,
+                                           b_scale=b_scale)
                     if best is None or bytes_ < best.hbm_bytes:
                         best = MatmulSchedule(
                             stationarity=stat, bm=cbm, bn=cbn, bk=cbk,
                             ic_p=ic_p, hbm_bytes=bytes_,
-                            flops=2.0 * m * n * k / ic_p)
+                            flops=2.0 * m * n * k / ic_p * flop_scale,
+                            sparsity_mode=sparsity_mode)
     assert best is not None
     return best
 

@@ -139,6 +139,52 @@ class BlockSparseMeta:
         return 1.0 - float(jnp.sum(self.kcnt)) / max(total, 1)
 
 
+def block_bitmap_jnp(x: jax.Array, bm: int, bk: int) -> jax.Array:
+    """Jit-compatible ``block_bitmap``: (M,K) -> (M/bm, K/bk) bool.
+
+    Shapes must already be block-multiples (the dispatch path pads first);
+    traced operands are fine, so per-layer weight slices inside a scan get
+    their bitmap derived at trace time.
+    """
+    m, k = x.shape
+    assert m % bm == 0 and k % bk == 0, (x.shape, bm, bk)
+    blocks = jnp.abs(x).reshape(m // bm, bm, k // bk, bk)
+    return blocks.max(axis=(1, 3)) > 0
+
+
+def build_block_sparse_meta_jnp(a_bitmap: jax.Array, b_bitmap: jax.Array,
+                                max_nnz: Optional[int] = None
+                                ) -> BlockSparseMeta:
+    """Jit-compatible CSB → compressed K-index lists.
+
+    The numpy builder's python loop is replaced by a stable argsort: sorting
+    ``~csb`` puts the live K-block indices first, in ascending order — the
+    same prefix the CAG unit would emit.  ``max_nnz`` must be static under
+    jit; it defaults to the full K-block count (the safe upper bound — dead
+    trailing steps are masked by ``kcnt`` inside the kernel).
+    """
+    tm, tk = a_bitmap.shape
+    tk2, tn = b_bitmap.shape
+    assert tk == tk2, (tk, tk2)
+    csb = a_bitmap[:, None, :] & jnp.swapaxes(b_bitmap, 0, 1)[None, :, :]
+    kcnt = jnp.sum(csb, axis=-1).astype(jnp.int32)
+    max_nnz = tk if max_nnz is None else max_nnz
+    # a caller-supplied bound below tk must cover every tile's live count —
+    # a truncated kidx would silently drop live MACs.  Checkable only for
+    # concrete bitmaps; traced callers must pass a static upper bound (tk).
+    if max_nnz < tk and not isinstance(kcnt, jax.core.Tracer):
+        assert int(kcnt.max()) <= max_nnz, \
+            f"max_nnz={max_nnz} < live K-blocks ({int(kcnt.max())})"
+    order = jnp.argsort(~csb, axis=-1, stable=True)       # live-first, asc
+    kidx = order[..., :max_nnz].astype(jnp.int32)
+    # dead-padded entries mirror the numpy builder's zero padding so the two
+    # builders agree entry-for-entry (the kernel never reads past kcnt)
+    pad_mask = jnp.arange(max_nnz)[None, None, :] < kcnt[..., None]
+    kidx = jnp.where(pad_mask, kidx, 0)
+    return BlockSparseMeta(kidx=kidx, kcnt=kcnt, a_bitmap=a_bitmap,
+                           b_bitmap=b_bitmap, max_nnz=int(max_nnz))
+
+
 def block_bitmap(x: np.ndarray, bm: int, bk: int) -> np.ndarray:
     """(M,K) -> (M/bm, K/bk) bool: True where the block has any non-zero."""
     m, k = x.shape

@@ -34,7 +34,10 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCKS = (128, 128, 128)
 
 
-def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+def pad_to_blocks(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    """Zero-pad a 2-D operand up to block multiples.  Shared with the
+    block-sparse dispatch in ``kernels.ops`` — padding blocks are all-zero,
+    so their bitmap bits are dead and the CSB path skips them."""
     p0 = (-x.shape[0]) % m0
     p1 = (-x.shape[1]) % m1
     if p0 or p1:
@@ -88,8 +91,8 @@ def _flex_matmul(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
                  out_dtype) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
-    a = _pad_to(a, bm, bk)
-    b = _pad_to(b, bk, bn)
+    a = pad_to_blocks(a, bm, bk)
+    b = pad_to_blocks(b, bk, bn)
     mp, kp = a.shape
     np_ = b.shape[1]
     tm, tn, tk = mp // bm, np_ // bn, kp // bk

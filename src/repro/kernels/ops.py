@@ -8,13 +8,26 @@ compile-only dry-run — Pallas TPU kernels do not lower for the CPU backend).
 The Pallas path consults the site's ``MatmulSchedule`` (FlexNN descriptor)
 for stationarity + block shapes; the XLA path leaves tiling to XLA while the
 *sharding*-level schedule decisions still apply.
+
+Sparsity dispatch (the §III-D wiring): when the site's descriptor carries
+``sparsity_mode`` of ``weight`` or ``two_sided``, the site routes through
+the block-sparse path instead of the dense matmul.  CSB metadata is built
+*at trace time* from the operand block bitmaps at the schedule's
+(bm, bk, bn) granularity — so per-layer weight slices inside a scan each get
+their own bitmap, and runtime activation sparsity is seen by ``two_sided``
+sites.  ``weight`` mode uses an all-ones activation bitmap (FL-side skipping
+only).  On the Pallas path the scalar-prefetch kernel in
+``kernels.block_sparse`` chases the compressed K-index lists (the CAG-unit
+analogue); on CPU the masked-XLA oracle computes the same skip semantics.
+Bitmaps derived from the data make every mode numerically identical to the
+dense product — zero blocks are skipped, never approximated.
 """
 from __future__ import annotations
 
 import contextlib
 import threading
-from dataclasses import dataclass, replace
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +41,7 @@ class ExecConfig:
     interpret: bool = False           # Pallas interpret mode (CPU validation)
     schedules: Optional[object] = None   # NetworkSchedule (descriptor table)
     default_stationarity: str = "output"
+    sparse_dispatch: bool = True      # honor SiteDescriptor.sparsity_mode
 
 
 def _cfg() -> ExecConfig:
@@ -44,31 +58,91 @@ def exec_config(cfg: ExecConfig):
         _state.cfg = prev
 
 
-def site_schedule(site: str):
-    cfg = _cfg()
+def _site_descriptor(site: str, cfg: Optional[ExecConfig] = None):
+    cfg = cfg or _cfg()
     if cfg.schedules is not None and site in cfg.schedules.sites:
-        return cfg.schedules.sites[site].schedule
+        return cfg.schedules.sites[site]
     return None
+
+
+def site_schedule(site: str):
+    desc = _site_descriptor(site)
+    return desc.schedule if desc is not None else None
+
+
+def site_sparsity_mode(site: str) -> str:
+    cfg = _cfg()
+    desc = _site_descriptor(site, cfg)
+    if desc is None or not cfg.sparse_dispatch:
+        return "dense"
+    return desc.sparsity_mode
+
+
+def _sparse_site_matmul(x2: jax.Array, w: jax.Array, mode: str, sched,
+                        cfg: ExecConfig) -> jax.Array:
+    """(M, K) @ (K, N) through the CSB block-sparse path.
+
+    Block granularity is the site schedule's (bm, bk, bn) clamped to the
+    operand dims; inputs are zero-padded to block multiples (padding blocks
+    are all-zero → CSB-dead → skipped).  Returns f32.
+    """
+    from repro.core import sparsity as sparsity_lib
+    from repro.kernels import block_sparse as bs
+    from repro.kernels.flex_matmul import DEFAULT_BLOCKS, pad_to_blocks
+
+    m, k = x2.shape
+    n = w.shape[1]
+    if sched is not None:
+        bm, bn, bk = sched.bm, sched.bn, sched.bk
+    else:
+        bm, bn, bk = DEFAULT_BLOCKS
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    xp = pad_to_blocks(x2, bm, bk)
+    wp = pad_to_blocks(w, bk, bn)
+    tm, tk = xp.shape[0] // bm, xp.shape[1] // bk
+    b_bitmap = sparsity_lib.block_bitmap_jnp(wp, bk, bn)
+    if mode == "two_sided":
+        a_bitmap = sparsity_lib.block_bitmap_jnp(xp, bm, bk)
+    else:                             # weight-sided: IF bitmap all ones
+        a_bitmap = jnp.ones((tm, tk), bool)
+    meta = sparsity_lib.build_block_sparse_meta_jnp(a_bitmap, b_bitmap)
+    if cfg.use_pallas:
+        out = bs.block_sparse_matmul(xp, wp, meta, interpret=cfg.interpret,
+                                     out_dtype=jnp.float32)
+    else:
+        out = bs.block_sparse_matmul_ref(xp, wp, meta)
+    return out[:m, :n]
 
 
 def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
                 precision=None) -> jax.Array:
     """x (..., K) @ w (K, N) through the schedule-flexible matmul.
 
-    Pallas path: ``kernels.flex_matmul`` with the site's descriptor
-    (stationarity / block shapes).  XLA path: dot_general (tiling delegated
-    to XLA; sharding-level schedule still applies upstream).
+    Dispatch order (descriptor → ops → kernel):
+      1. site descriptor says ``weight``/``two_sided`` → block-sparse path
+         (Pallas kernel or masked-XLA oracle; see module docstring),
+      2. Pallas enabled → ``kernels.flex_matmul`` with the site's
+         (stationarity, block shapes),
+      3. otherwise dot_general (tiling delegated to XLA; sharding-level
+         schedule still applies upstream).
     """
     cfg = _cfg()
-    if cfg.use_pallas and x.ndim >= 2:
-        from repro.kernels import flex_matmul as fm
-        sched = site_schedule(site)
+    desc = _site_descriptor(site, cfg) if cfg.sparse_dispatch else None
+    sparse = (desc is not None and w.ndim == 2
+              and desc.sparsity_mode in ("weight", "two_sided"))
+    if (sparse or cfg.use_pallas) and x.ndim >= 2:
         lead = x.shape[:-1]
         m = 1
         for d in lead:
             m *= d
         x2 = x.reshape(m, x.shape[-1])
-        out = fm.flex_matmul(x2, w, schedule=sched, interpret=cfg.interpret)
+        if sparse:
+            out = _sparse_site_matmul(x2, w, desc.sparsity_mode,
+                                      desc.schedule, cfg)
+        else:
+            from repro.kernels import flex_matmul as fm
+            out = fm.flex_matmul(x2, w, schedule=site_schedule(site),
+                                 interpret=cfg.interpret)
         return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
     return jax.lax.dot_general(
         x, w, (((x.ndim - 1,), (0,)), ((), ())),
@@ -78,8 +152,9 @@ def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
 
 def block_sparse_matmul(x: jax.Array, w: jax.Array, meta, *,
                         site: str = "") -> jax.Array:
-    """Two-sided block-sparse matmul (CSB-skipped).  ``meta`` is a
-    ``core.sparsity.BlockSparseMeta``; None falls back to dense."""
+    """Two-sided block-sparse matmul with *precomputed* metadata.  ``meta``
+    is a ``core.sparsity.BlockSparseMeta``; None falls back to the
+    descriptor-driven ``flex_matmul`` dispatch."""
     cfg = _cfg()
     if meta is None:
         return flex_matmul(x, w, site=site)

@@ -28,6 +28,7 @@ import traceback
 import jax
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.core.descriptors import compile_network_schedule
 from repro.launch.mesh import make_production_mesh
 from repro.launch.step_builders import build_cell_step, lower_cell
 from repro.roofline.hlo import f32_upcast_bytes, parse_collectives
@@ -67,6 +68,22 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
 
     hlo = compiled.as_text()
     coll = parse_collectives(hlo, n_dev)
+
+    # per-site descriptor table (§III-A registers): the chosen dataflow +
+    # sparsity mode per matmul site, observable alongside the XLA analysis
+    ns = compile_network_schedule(get_config(arch_id), SHAPES[shape_name],
+                                  model_shards=int(dict(mesh.shape)
+                                                   .get("model", 1)))
+    sites = {
+        name: {
+            "m": d.m, "n": d.n, "k": d.k,
+            "stationarity": d.schedule.stationarity,
+            "blocks": [d.schedule.bm, d.schedule.bn, d.schedule.bk],
+            "ic_p": d.reduce.ic_p, "reduce_strategy": d.reduce.strategy,
+            "sparsity_mode": d.sparsity_mode,
+            "hbm_bytes": d.schedule.hbm_bytes,
+            "flops": d.schedule.flops,
+        } for name, d in ns.sites.items()}
     # XLA:CPU float-normalization inflation (absent on the TPU target):
     # hoisted f32 copies of bf16 scan-carried weights/caches.  Subtract a
     # conservative estimate (never below temp/3) for the TPU-side verdict.
@@ -82,6 +99,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
         "mesh_shape": dict(zip(mesh.axis_names,
                                [int(s) for s in mesh.devices.shape])),
         "n_micro": step.shape.n_micro, "remat": step.shape.remat,
+        "sites": sites,
         "seconds": {"lower": round(t_lower, 1),
                     "compile": round(t_compile, 1)},
         "memory": mem,

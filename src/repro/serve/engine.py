@@ -9,10 +9,16 @@ Prefill uses the cache-filling fast path for plain dense stacks and falls
 back to token-by-token state feeding for heterogeneous families (MoE / SSM /
 hybrid) — the per-arch decode state layouts all come from
 ``models.transformer.init_decode_state``.
+
+Sparsity/dataflow wiring: an optional ``ExecConfig`` (see ``kernels.ops``)
+is installed around every decode trace, so the engine's matmul sites consult
+their ``SiteDescriptor`` — per-site stationarity and ``weight``/``two_sided``
+block-sparse dispatch run inside the jitted decode step.
+``decode_exec_config`` compiles the decode-shape ``NetworkSchedule`` for an
+arch (the descriptor-register update at engine bring-up, §III-A).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -20,8 +26,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.kernels import ops
 from repro.models import model as model_lib
+
+
+def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
+                       model_shards: int = 1,
+                       use_pallas: bool = False,
+                       interpret: bool = False) -> ops.ExecConfig:
+    """ExecConfig carrying the decode-shape descriptor table for ``cfg``.
+
+    The schedule compiler sees M = n_slots (one new token per live slot);
+    sparsity modes/densities flow from ``cfg.sparsity`` via
+    ``compile_network_schedule``.
+    """
+    from repro.core.descriptors import compile_network_schedule
+    shape = ShapeConfig(name="serve_decode", kind="decode", seq_len=1,
+                        global_batch=n_slots)
+    ns = compile_network_schedule(cfg, shape, model_shards=model_shards)
+    return ops.ExecConfig(use_pallas=use_pallas, interpret=interpret,
+                          schedules=ns)
 
 
 @dataclass
@@ -41,16 +66,26 @@ class _Slot:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
-                 max_seq: int = 256, dtype=jnp.float32):
+                 max_seq: int = 256, dtype=jnp.float32,
+                 exec_cfg: Optional[ops.ExecConfig] = None):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
+        self.exec_cfg = exec_cfg
         self.state = model_lib.init_decode_state(cfg, n_slots, max_seq,
                                                  dtype=dtype)
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: List[Request] = []
         self._uid = 0
-        self._decode = jax.jit(
-            lambda p, t, s, pos: model_lib.decode_step(p, cfg, t, s, pos))
+
+        def _decode_fn(p, t, s, pos):
+            if self.exec_cfg is None:
+                return model_lib.decode_step(p, cfg, t, s, pos)
+            # thread-local exec config is read at trace time; installing it
+            # here scopes the descriptor table to this engine's decode step
+            with ops.exec_config(self.exec_cfg):
+                return model_lib.decode_step(p, cfg, t, s, pos)
+
+        self._decode = jax.jit(_decode_fn)
 
     # ---- request management ----
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:

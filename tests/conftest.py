@@ -1,10 +1,27 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
-multi-device behaviour is exercised in subprocesses (see helpers below)."""
+multi-device behaviour is exercised in subprocesses (see helpers below).
+
+Also hosts a minimal ``hypothesis`` shim: the container does not ship the
+real package, so property-test modules import ``given / settings /
+strategies`` from here.  When hypothesis *is* installed it is re-exported
+unchanged; otherwise a deterministic seeded-numpy sampler with the same
+decorator surface runs each property ``max_examples`` times.
+"""
+import os
 import subprocess
 import sys
+import zlib
 
 import numpy as np
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavy model/system tests excluded from the fast "
+        "CI lane (run with -m slow or no marker filter)")
 
 
 @pytest.fixture
@@ -15,10 +32,75 @@ def rng():
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     """Run a python snippet in a subprocess with N forced host devices."""
     env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}",
-           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
-           "HOME": "/root"}
+           "PYTHONPATH": "src", "PATH": os.environ.get(
+               "PATH", "/usr/bin:/bin:/usr/local/bin"),
+           "HOME": os.environ.get("HOME", "/root")}
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=timeout,
-                          cwd="/root/repo")
+                          cwd=REPO_ROOT)
     assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
     return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shim (@given / @settings / strategies)
+# ---------------------------------------------------------------------------
+
+try:                                      # real hypothesis wins when present
+    from hypothesis import given, settings, strategies    # noqa: F401
+except ImportError:
+
+    class _Strategy:
+        """A sampler ``rng -> value`` with hypothesis' map/flatmap surface."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def flatmap(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng))._draw(rng))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=20, **_ignored):
+        def deco(f):
+            f._shim_max_examples = max_examples
+            return f
+        return deco
+
+    def given(**strats):
+        def deco(f):
+            def wrapper():
+                n = getattr(wrapper, "_shim_max_examples", 20)
+                seed = zlib.crc32(f.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    f(**{k: s._draw(rng) for k, s in strats.items()})
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper._shim_max_examples = getattr(f, "_shim_max_examples", 20)
+            return wrapper
+        return deco

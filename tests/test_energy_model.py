@@ -1,7 +1,11 @@
-"""Energy/latency model invariants (the paper's own evaluation framework)."""
+"""Energy/latency model invariants (the paper's own evaluation framework).
+
+Property tests use the hypothesis-compatible conftest shim when the real
+package is absent (seeded-numpy sampling, same decorator surface)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, strategies as st
 
 from repro.core.energy_model import (DENSE, EYERISS, FLEXNN, TPU, ConvLayer,
                                      Schedule, SparsityStats, evaluate,

@@ -9,6 +9,9 @@ import pytest
 from repro.configs.base import ARCH_IDS, get_smoke_config
 from repro.models import model as M
 
+# heavy: per-arch jit compiles / subprocess meshes — excluded from the fast CI lane
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, b=2, s=32, seed=0):
     rng = np.random.default_rng(seed)

@@ -73,6 +73,7 @@ def test_dispatch_indices_sentinel_never_dispatched():
     assert int(f_sel[1, 0]) == 2
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_ep_shard_map_matches_oracle():
     """EP all-to-all path on 8 forced host devices (2 data × 4 model)."""
     run_with_devices("""

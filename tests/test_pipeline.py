@@ -12,6 +12,7 @@ def test_bubble_fraction():
     assert bubble_fraction(1, 8) == 0.0
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_pipeline_matches_sequential():
     run_with_devices("""
 import numpy as np, jax, jax.numpy as jnp
@@ -42,6 +43,7 @@ print('pipeline == sequential OK')
 """)
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_pipeline_single_stage_degenerates():
     run_with_devices("""
 import numpy as np, jax, jax.numpy as jnp

@@ -55,6 +55,7 @@ def test_compile_network_schedule_all_archs():
         assert "NetworkSchedule" in ns.describe()
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_partition_rules_on_mesh():
     """Param/batch/state shardings resolve and divide on an 8-dev mesh."""
     run_with_devices("""
@@ -97,6 +98,7 @@ print('partition rules OK')
 """)
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_train_step_on_mesh_runs():
     """A sharded train step executes end-to-end on an 8-device host mesh."""
     run_with_devices("""
@@ -129,6 +131,7 @@ print('sharded train step OK, loss', float(m['loss']))
 """)
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_dp_compressed_step_runs():
     run_with_devices("""
 import numpy as np, jax, jax.numpy as jnp

@@ -1,8 +1,10 @@
-"""Property tests for the two-sided sparsity machinery (hypothesis)."""
+"""Property tests for the two-sided sparsity machinery (hypothesis-style;
+runs on the deterministic conftest shim when hypothesis is not installed)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, strategies as st
 
 from repro.core import sparsity as S
 

@@ -119,6 +119,7 @@ def test_ckpt_restore_casts_dtype(tmp_path):
 # Serving engine
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow        # token-by-token engine drain — heavy
 def test_serve_engine_drains_and_matches_decode():
     from repro.configs.base import get_smoke_config
     from repro.models import model as M
@@ -185,6 +186,7 @@ def test_link_bytes_and_best_strategy():
     assert FT.link_bytes("allreduce", 100.0, 1) == 0.0
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_reduce_psum_strategies_agree():
     """allreduce / tree / scatter produce the correct sum on 8 devices."""
     run_with_devices("""

@@ -6,9 +6,13 @@ import os
 
 import pytest
 
-from conftest import run_with_devices
+from conftest import REPO_ROOT, run_with_devices
 
-ART = "/root/repo/artifacts"
+# heavy: subprocess meshes + artifact validation — excluded from the fast
+# CI lane
+pytestmark = pytest.mark.slow
+
+ART = os.path.join(REPO_ROOT, "artifacts")
 
 
 def test_dryrun_cell_small_mesh():

@@ -114,6 +114,7 @@ def test_int8_quantize_roundtrip(rng):
     assert err <= float(s) * 0.51 + 1e-6
 
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_compressed_mean_shard_map():
     """EF-int8 and ZVC-top-k means vs exact mean on 8 devices; error
     feedback carries the residual."""
@@ -157,6 +158,7 @@ def test_wire_bytes_model():
 # Trainer: checkpoint/restart + watchdog
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow        # subprocess mesh — heavy
 def test_trainer_checkpoint_resume(tmp_path):
     cfg, shape, opt = _setup()
     pipe_cfg = DataConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
