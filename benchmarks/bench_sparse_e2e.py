@@ -6,18 +6,20 @@ For each sparsity profile this measures, on CPU:
     ``kernels.ops.flex_matmul`` under dense / weight / two_sided descriptor
     tables (the XLA skip-semantics path; the Pallas kernel needs a TPU for
     real wall-clock wins — CPU numbers validate the plumbing, the *modeled*
-    columns carry the paper's claim),
+    columns carry the paper's claim), plus the **precompiled-plan** variant
+    (``two_sided_plan``: weight metadata hoisted out of the trace, tight
+    ``max_nnz``) — the planned vs trace-time latency comparison,
   * **engine step time** — ``serve.engine.ServeEngine`` decode steps with a
-    dense vs ``two_sided`` exec config on a smoke LM,
+    dense vs ``two_sided`` vs plan-backed exec config on a smoke LM,
   * **modeled energy + cycles** — the paper's own evaluation framework
     (``core.energy_model``) on the equivalent layer, per sparsity variant,
   * **modeled HBM traffic / roofline time** — the TPU-native schedule
     selector's co-optimized cost per mode, plus the measured block-CSB
-    skip fraction.
+    skip fraction and the plan's ZVC bytes saved.
 
 Emits a JSON report (default ``artifacts/bench/sparse_e2e.json``).
 
-Run:  PYTHONPATH=src python benchmarks/bench_sparse_e2e.py
+Run:  PYTHONPATH=src python benchmarks/bench_sparse_e2e.py [--quick]
 """
 from __future__ import annotations
 
@@ -39,7 +41,8 @@ from repro.core.energy_model import (ConvLayer, FLEXNN, SparsityStats,
 from repro.core.flextree import ReduceConfig
 from repro.core.scheduler import (MatmulSchedule, optimize_layer,
                                   roofline_time, select_matmul_schedule)
-from repro.core.sparsity import build_block_sparse_meta, prune_magnitude
+from repro.core.sparsity import (build_block_sparse_meta, plan_weight,
+                                 prune_magnitude, zvc_compressed_bytes)
 from repro.kernels import ops
 from repro.models import model as model_lib
 from repro.serve.engine import ServeEngine, decode_exec_config
@@ -79,7 +82,8 @@ def _site_table(mode: str, m: int, n: int, k: int, blocks=(64, 64, 64),
     return ns
 
 
-def bench_site(profile: dict, m=256, k=512, n=1024) -> Dict[str, object]:
+def bench_site(profile: dict, m=256, k=512, n=1024,
+               timing_iters=20) -> Dict[str, object]:
     rng = np.random.default_rng(0)
     w = prune_magnitude(rng.normal(size=(k, n)).astype(np.float32),
                         profile["weight_sparsity"], block=(64, 64))
@@ -104,13 +108,30 @@ def bench_site(profile: dict, m=256, k=512, n=1024) -> Dict[str, object]:
         with ops.exec_config(ops.ExecConfig(use_pallas=False,
                                             schedules=table)):
             f = jax.jit(lambda a, b: ops.flex_matmul(a, b, site="mlp.in"))
-            t = _median_time(lambda: f(xj, wj))
+            t = _median_time(lambda: f(xj, wj), n=timing_iters)
             got = np.asarray(f(xj, wj))
         if ref is None:
             ref = got
         else:                      # every mode must equal the dense product
             np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-4)
         out["step_time_s"][mode] = t
+
+    # precompiled-plan path: weight metadata hoisted out of the trace, tight
+    # max_nnz — the planned vs trace-time two_sided comparison
+    pw = plan_weight(w, site="mlp.in", mode="two_sided", bm=64, bk=64, bn=64)
+    fp = jax.jit(lambda a, p: ops.flex_matmul(a, p, site="mlp.in"))
+    out["step_time_s"]["two_sided_plan"] = _median_time(
+        lambda: fp(xj, pw), n=timing_iters)
+    np.testing.assert_allclose(np.asarray(fp(xj, pw)), ref,
+                               rtol=2e-5, atol=2e-4)
+    dense_bytes = w.size * w.itemsize
+    zvc_bytes = zvc_compressed_bytes(w, w.itemsize)
+    out["plan"] = {
+        "max_nnz": pw.max_nnz, "tk": pw.tk,
+        "wt_density": wt_d,
+        "dense_bytes": dense_bytes, "zvc_bytes": zvc_bytes,
+        "bytes_saved": max(dense_bytes - zvc_bytes, 0.0),
+    }
 
     # modeled energy/cycles: the paper's framework on the equivalent layer
     # (m = ox·oy, oc = n, ic = k), same optimal schedule for every variant
@@ -151,8 +172,8 @@ def bench_engine(profile: dict, arch="stablelm-1.6b", n_steps=12
     cfg = get_smoke_config(arch)
     params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
                                    dtype=jnp.float32)
-    # both engines run the SAME pruned params — the two_sided column then
-    # measures dispatch with genuinely sparse bitmaps, and the token match
+    # all engines run the SAME pruned params — the sparse columns then
+    # measure dispatch with genuinely sparse bitmaps, and the token match
     # proves skipping (not approximating) on real zeros
     params = _prune_stack(params, profile["weight_sparsity"])
     sp_cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
@@ -160,8 +181,10 @@ def bench_engine(profile: dict, arch="stablelm-1.6b", n_steps=12
         activation_threshold=0.05))
     out: Dict[str, object] = {"arch": arch, "step_time_s": {}}
     tokens: Dict[str, list] = {}
+    plan_ec = decode_exec_config(sp_cfg, n_slots=2, params=params)
     for mode, ec in (("dense", None),
-                     ("two_sided", decode_exec_config(sp_cfg, n_slots=2))):
+                     ("two_sided", decode_exec_config(sp_cfg, n_slots=2)),
+                     ("two_sided_plan", plan_ec)):
         eng = ServeEngine(cfg, params, n_slots=2, max_seq=64, exec_cfg=ec)
         for p in ([3, 5, 7], [2, 4, 6]):
             eng.submit(np.asarray(p, np.int32), max_new=n_steps)
@@ -173,17 +196,33 @@ def bench_engine(profile: dict, arch="stablelm-1.6b", n_steps=12
         out["step_time_s"][mode] = (time.perf_counter() - t0) / max(done - 1,
                                                                     1)
         tokens[mode] = [s.req.out for s in eng.slots if s.req is not None]
-    assert tokens["dense"] == tokens["two_sided"], \
-        "two_sided engine diverged from dense"
+    for mode in ("two_sided", "two_sided_plan"):
+        assert tokens["dense"] == tokens[mode], \
+            f"{mode} engine diverged from dense"
     out["tokens_match_dense"] = True
+    if plan_ec.plan is not None:
+        out["plan_sites"] = plan_ec.plan.stats()
+    # short calibration pass: runtime activation popcounts (the collect_stats
+    # debug callbacks cost wall-clock, so they stay out of the timed engines)
+    calib = ServeEngine(cfg, params, n_slots=2, max_seq=64,
+                        exec_cfg=dataclasses.replace(plan_ec,
+                                                     collect_stats=True))
+    calib.submit(np.asarray([3, 5, 7], np.int32), max_new=3)
+    for _ in range(4):
+        calib.step()
+    out["act_densities"] = calib.activation_densities()
     return out
 
 
-def run(out_path: str, verbose: bool = True) -> Dict[str, object]:
+def run(out_path: str, verbose: bool = True,
+        quick: bool = False) -> Dict[str, object]:
+    profiles = ({"moderate": PROFILES["moderate"]} if quick else PROFILES)
+    site_kw = (dict(m=128, k=256, n=256, timing_iters=5) if quick else {})
+    n_steps = 6 if quick else 12
     report: Dict[str, object] = {"profiles": {}}
-    for name, prof in PROFILES.items():
-        site = bench_site(prof)
-        eng = bench_engine(prof)
+    for name, prof in profiles.items():
+        site = bench_site(prof, **site_kw)
+        eng = bench_engine(prof, n_steps=n_steps)
         report["profiles"][name] = {"config": prof, "site": site,
                                     "engine": eng}
         if verbose:
@@ -199,9 +238,15 @@ def run(out_path: str, verbose: bool = True) -> Dict[str, object]:
                       f"hbm={md[mode]['hbm_bytes']/2**20:.1f} MiB  "
                       f"roofline={md[mode]['roofline_s']*1e6:.1f} us "
                       f"[{md[mode]['stationarity']}]")
+            pl = site["plan"]
+            print(f"  two_sided_plan step={st['two_sided_plan']*1e3:7.3f} ms "
+                  f"(trace-time {st['two_sided']*1e3:.3f} ms)  "
+                  f"max_nnz={pl['max_nnz']}/{pl['tk']}  "
+                  f"zvc saves {pl['bytes_saved']/2**10:.0f} KiB")
             es = eng["step_time_s"]
             print(f"  engine decode: dense={es['dense']*1e3:.2f} ms "
                   f"two_sided={es['two_sided']*1e3:.2f} ms "
+                  f"planned={es['two_sided_plan']*1e3:.2f} ms "
                   f"(tokens match: {eng['tokens_match_dense']})")
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
@@ -231,8 +276,10 @@ def validate(report: Dict[str, object]) -> list:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="artifacts/bench/sparse_e2e.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: one profile, small shapes, few iters")
     args = ap.parse_args()
-    rep = run(args.out)
+    rep = run(args.out, quick=args.quick)
     fails = validate(rep)
     print("VALIDATION:", "PASS" if not fails else fails)
     raise SystemExit(1 if fails else 0)

@@ -27,15 +27,23 @@ Dispatch contract (descriptor → ops → block_sparse):
   * ``kernels.ops.flex_matmul`` consults the active ``ExecConfig.schedules``
     by site name: ``dense`` sites run the schedule-flexible dense matmul;
     ``weight``/``two_sided`` sites route through the block-sparse path at
-    the schedule's (bm, bk, bn) granularity — CSB metadata is built at trace
-    time from the operand block bitmaps (weight mode: activation bitmap all
-    ones), then executed by ``kernels.block_sparse`` on the Pallas path or
-    its masked-XLA oracle on CPU.  Bitmaps derived from the data make every
-    mode numerically identical to dense — zero blocks are *skipped*, never
-    approximated.
+    the schedule's (bm, bk, bn) granularity — CSB metadata comes from a
+    precompiled ``WeightSparsityPlan`` (engine bring-up; tight per-site
+    ``max_nnz``, only the activation bitmap derived in-trace) or, without a
+    plan, is built at trace time from the operand block bitmaps (weight
+    mode: activation bitmap all ones), then executed by
+    ``kernels.block_sparse`` on the Pallas path or its masked-XLA oracle on
+    CPU.  Bitmaps derived from the data make every mode numerically
+    identical to dense — zero blocks are *skipped*, never approximated.
+  * Densities for the schedule search start from config priors
+    (``sparsity_densities_for``) and are replaced by measured values:
+    weight side from the compiled plan, activation side from runtime
+    popcount feedback (``compile_network_schedule(wt_densities=...,
+    act_densities=...)``).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -105,6 +113,8 @@ def matmul_sites(cfg: ArchConfig, shape: ShapeConfig,
                           3 * cfg.moe.expert_d_ff * cfg.moe.n_shared // ms, d))
     elif cfg.d_ff:
         sites.append(("mlp.in", tokens, 3 * cfg.d_ff // ms, d))
+        if cfg.act != "gelu_plain":    # gated MLPs: gate shares mlp.in dims
+            sites.append(("mlp.gate", tokens, 3 * cfg.d_ff // ms, d))
         sites.append(("mlp.out", tokens, d, cfg.d_ff // ms))
     if cfg.ssm.enabled:
         d_in = cfg.ssm.expand * d
@@ -113,6 +123,7 @@ def matmul_sites(cfg: ArchConfig, shape: ShapeConfig,
     if cfg.rglru.enabled:
         w = cfg.rglru.lru_width
         sites.append(("rglru.in", tokens, 2 * w // ms, d))
+        sites.append(("rglru.gate", tokens, 2 * w // ms, d))
         sites.append(("rglru.out", tokens, d, w // ms))
     sites.append(("lm_head", tokens, cfg.vocab // ms, d))
     return sites
@@ -149,8 +160,18 @@ def sparsity_densities_for(cfg: ArchConfig) -> Tuple[float, float]:
 def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
                              model_shards: int = 1,
                              contraction_axis: str = "model",
-                             hw: TPUHardware = TPU_V5E) -> NetworkSchedule:
-    """The compiler pass: optimal schedule per site (§III-A role)."""
+                             hw: TPUHardware = TPU_V5E,
+                             wt_densities: Optional[Dict[str, float]] = None,
+                             act_densities: Optional[Dict[str, float]] = None,
+                             ) -> NetworkSchedule:
+    """The compiler pass: optimal schedule per site (§III-A role).
+
+    ``wt_densities``/``act_densities`` override the config-level priors with
+    *measured* per-site densities — weight side from a compiled
+    ``WeightSparsityPlan`` (``plan.wt_densities()``), activation side from
+    runtime bitmap popcounts fed back by the engine
+    (``ServeEngine.activation_densities()``).
+    """
     ns = NetworkSchedule(arch=cfg.name, shape=shape.name)
     spars = sparsity_mode_for(cfg)
     act_d, wt_d = sparsity_densities_for(cfg)
@@ -159,9 +180,10 @@ def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
         # site's weight is K-sharded (attn.out / mlp.out style sites).
         k_sharded = site.endswith(".out") or site.endswith("out_proj")
         ic_p = model_shards if (k_sharded and model_shards > 1) else 1
-        sched = select_matmul_schedule(m, n, k, hw=hw, ic_p=ic_p,
-                                       sparsity_mode=spars,
-                                       act_density=act_d, wt_density=wt_d)
+        sched = select_matmul_schedule(
+            m, n, k, hw=hw, ic_p=ic_p, sparsity_mode=spars,
+            act_density=(act_densities or {}).get(site, act_d),
+            wt_density=(wt_densities or {}).get(site, wt_d))
         payload = m * n * 4.0     # f32 psums
         strat = best_strategy(payload, ic_p, consumer_sharded=False)
         ns.sites[site] = SiteDescriptor(
@@ -171,3 +193,33 @@ def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
             sparsity_mode=spars,
         )
     return ns
+
+
+def site_plan_estimate(d: SiteDescriptor, cfg: ArchConfig,
+                       in_bytes: int = 2) -> Dict[str, object]:
+    """Modeled weight-plan stats for one site: what ``compile_weight_plan``
+    would measure, estimated from the config's density prior.
+
+    Used by the dry-run (which lowers against ShapeDtypeStructs — there are
+    no param tensors to compile a real plan from) to record per-site plan
+    economics in cell artifacts: K-block count at the schedule granularity,
+    the expected tight ``max_nnz``, and ZVC bytes saved at rest.  Engines
+    with real params get measured numbers via ``WeightSparsityPlan.stats``.
+    """
+    act_d, wt_d = sparsity_densities_for(cfg)
+    bk = max(min(d.schedule.bk, d.k), 1)
+    tk = -(-d.k // bk)
+    sparse = d.sparsity_mode in ("weight", "two_sided")
+    est_nnz = max(1, min(tk, math.ceil(tk * wt_d))) if sparse else tk
+    dense_bytes = d.k * d.n * in_bytes
+    zvc_bytes = (dense_bytes * wt_d + d.k * d.n / 8.0 if sparse
+                 else float(dense_bytes))
+    return {
+        "sparsity_mode": d.sparsity_mode,
+        "wt_density": wt_d if sparse else 1.0,
+        "tk": tk,
+        "est_max_nnz": est_nnz,
+        "dense_bytes": dense_bytes,
+        "zvc_bytes": zvc_bytes,
+        "bytes_saved": max(dense_bytes - zvc_bytes, 0.0),
+    }

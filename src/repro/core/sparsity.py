@@ -15,12 +15,22 @@ Three layers of the paper's idea, adapted per DESIGN.md §2:
    for A (M×K) and B (K×N), CSB per (m,n) output tile = AND across the K
    blocks, compressed into a scalar-prefetch index list consumed by
    ``kernels.block_sparse`` (the CAG unit analogue).
+
+4. **Precompiled weight-sparsity plans** — the CAG's "build once, reuse per
+   layer" half: weights are static at serving time, so their block bitmaps,
+   ZVC packing and per-output-column live-K index lists are compiled *once*
+   at engine bring-up (``compile_weight_plan``) from the actual param
+   tensors, with a tight ``max_nnz`` = max live K-blocks per site instead of
+   the trace-time ``tk`` upper bound.  Inside the jitted step only the
+   activation-side bitmap is derived; ``combine_with_activation_meta`` ANDs
+   it into the precomputed weight metadata without re-deriving (or
+   re-argsorting) the weight side.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -153,28 +163,43 @@ def block_bitmap_jnp(x: jax.Array, bm: int, bk: int) -> jax.Array:
 
 
 def build_block_sparse_meta_jnp(a_bitmap: jax.Array, b_bitmap: jax.Array,
-                                max_nnz: Optional[int] = None
-                                ) -> BlockSparseMeta:
+                                max_nnz: Optional[int] = None, *,
+                                site: str = "") -> BlockSparseMeta:
     """Jit-compatible CSB → compressed K-index lists.
 
     The numpy builder's python loop is replaced by a stable argsort: sorting
     ``~csb`` puts the live K-block indices first, in ascending order — the
     same prefix the CAG unit would emit.  ``max_nnz`` must be static under
     jit; it defaults to the full K-block count (the safe upper bound — dead
-    trailing steps are masked by ``kcnt`` inside the kernel).
+    trailing steps are masked by ``kcnt`` inside the kernel).  ``site`` only
+    labels the over-tight error message.
     """
     tm, tk = a_bitmap.shape
     tk2, tn = b_bitmap.shape
     assert tk == tk2, (tk, tk2)
-    csb = a_bitmap[:, None, :] & jnp.swapaxes(b_bitmap, 0, 1)[None, :, :]
-    kcnt = jnp.sum(csb, axis=-1).astype(jnp.int32)
     max_nnz = tk if max_nnz is None else max_nnz
     # a caller-supplied bound below tk must cover every tile's live count —
-    # a truncated kidx would silently drop live MACs.  Checkable only for
-    # concrete bitmaps; traced callers must pass a static upper bound (tk).
-    if max_nnz < tk and not isinstance(kcnt, jax.core.Tracer):
-        assert int(kcnt.max()) <= max_nnz, \
-            f"max_nnz={max_nnz} < live K-blocks ({int(kcnt.max())})"
+    # a truncated kidx would silently drop live MACs.  Checkable whenever
+    # the bitmaps are concrete — including inside a jitted caller that
+    # closed over them (omnistaging turns the *products* into tracers, so
+    # the check runs on the numpy values of the inputs and therefore still
+    # fails loudly at trace time).  Traced bitmaps must pass a static upper
+    # bound (tk).
+    if max_nnz < tk and not (isinstance(a_bitmap, jax.core.Tracer)
+                             or isinstance(b_bitmap, jax.core.Tracer)):
+        a_np = np.asarray(a_bitmap, bool)
+        b_np = np.asarray(b_bitmap, bool)
+        kc = (a_np[:, None, :] & b_np.T[None, :, :]).sum(-1)
+        worst = int(kc.max())
+        if worst > max_nnz:
+            mi, ni = np.unravel_index(int(kc.argmax()), kc.shape)
+            raise ValueError(
+                f"{site + ': ' if site else ''}max_nnz={max_nnz} < live "
+                f"K-blocks ({worst}) at output tile (mi={int(mi)}, "
+                f"ni={int(ni)}) — a truncated kidx would silently drop "
+                f"live MACs")
+    csb = a_bitmap[:, None, :] & jnp.swapaxes(b_bitmap, 0, 1)[None, :, :]
+    kcnt = jnp.sum(csb, axis=-1).astype(jnp.int32)
     order = jnp.argsort(~csb, axis=-1, stable=True)       # live-first, asc
     kidx = order[..., :max_nnz].astype(jnp.int32)
     # dead-padded entries mirror the numpy builder's zero padding so the two
@@ -246,6 +271,383 @@ def prune_magnitude(w: np.ndarray, sparsity: float,
     return pad.reshape(tm * bm, tk * bk)[:m, :k]
 
 
+def prune_k_blocks(w: np.ndarray, bk: int, bn: int,
+                   max_live: int) -> np.ndarray:
+    """Structured prune: keep the ``max_live`` highest-L2 (bk, bn) K-blocks
+    per output-block column, zero the rest (N:M-style sparsity along K).
+
+    Unlike the global-quantile ``prune_magnitude``, this guarantees *every*
+    output column has ≤ ``max_live`` live K-blocks, so a weight plan built on
+    the result gets a strictly tight ``max_nnz = max_live < tk``.
+    """
+    k, n = w.shape
+    tk, tn = -(-k // bk), -(-n // bn)
+    if max_live >= tk:
+        return w
+    pad = np.zeros((tk * bk, tn * bn), dtype=w.dtype)
+    pad[:k, :n] = w
+    blocks = pad.reshape(tk, bk, tn, bn)
+    norms = np.sqrt((blocks.astype(np.float64) ** 2).sum(axis=(1, 3)))
+    order = np.argsort(-norms, axis=0, kind="stable")        # (tk, tn)
+    mask = np.zeros((tk, tn), dtype=w.dtype)
+    np.put_along_axis(mask, order[:max_live], 1, axis=0)
+    return (blocks * mask[:, None, :, None]).reshape(tk * bk,
+                                                     tn * bn)[:k, :n]
+
+
 def relu_activation_bitmap(x: jax.Array, threshold: float = 0.0) -> jax.Array:
     """Activation bitmap after thresholding (§II-B ReLU-induced sparsity)."""
     return jnp.abs(x) > threshold
+
+
+# ---------------------------------------------------------------------------
+# 5. Precompiled weight-sparsity plans (engine bring-up → decode step)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlannedWeight:
+    """A weight tensor bundled with its precompiled weight-side CSB metadata.
+
+    Registered pytree node (``register_dataclass`` — C-level flattening, so
+    per-step dispatch stays on the jit fastpath): the arrays are leaves —
+    ordinary jit inputs, so nothing weight-side is rebuilt inside the jitted
+    step — and the geometry is static aux data.  Because it is a pytree node
+    it rides *inside* the params tree: ``lax.scan`` over stacked layer
+    weights slices the metadata per layer exactly like the weight itself
+    (every leaf carries the layer axis in front).
+    ``kernels.ops.flex_matmul`` detects it and dispatches through the plan
+    path; raw ``x @ w`` call sites (decode fast paths that bypass
+    ``flex_matmul``) fall back to the dense weight via ``__rmatmul__``.
+    """
+    w: jax.Array          # (..., K, N) dense weight
+    wkidx: jax.Array      # (..., tn, max_nnz) int32 — live K-blocks per
+    #                       N-block column, ascending, zero-padded
+    wkcnt: jax.Array      # (..., tn) int32 — live count per column
+    b_bitmap: jax.Array   # (..., tk, tn) bool — weight block bitmap
+    site: str = ""
+    mode: str = "weight"  # weight | two_sided
+    bm: int = 128
+    bk: int = 128
+    bn: int = 128
+    max_nnz: int = 1      # tight static bound: max live K-blocks (≤ tk)
+    tk: int = 1           # dense K-block count (the trace-time upper bound)
+
+    def __rmatmul__(self, other):
+        return other @ self.w
+
+    @property
+    def shape(self):
+        return self.w.shape
+
+    @property
+    def ndim(self):
+        return self.w.ndim
+
+    @property
+    def dtype(self):
+        return self.w.dtype
+
+
+jax.tree_util.register_dataclass(
+    PlannedWeight,
+    data_fields=("w", "wkidx", "wkcnt", "b_bitmap"),
+    meta_fields=("site", "mode", "bm", "bk", "bn", "max_nnz", "tk"))
+
+
+def weight_side_lists(b_bitmap: np.ndarray,
+                      max_nnz: Optional[int] = None, *,
+                      site: str = "") -> Tuple[np.ndarray, np.ndarray]:
+    """Per-output-column live-K index lists from a weight block bitmap —
+    the offline half of the CAG unit.
+
+    ``wkidx[ni, :wkcnt[ni]]`` lists the K-block indices where the weight
+    block in column ``ni`` is non-zero, ascending; entries past the count
+    are zero-padded.  ``max_nnz`` below the tightest bound raises
+    ``ValueError`` with the offending column.
+    """
+    b = np.asarray(b_bitmap, bool)
+    tk, tn = b.shape
+    wkcnt = b.sum(axis=0).astype(np.int32)
+    tight = max(int(wkcnt.max()), 1)
+    if max_nnz is None:
+        max_nnz = tight
+    elif max_nnz < tight:
+        ni = int(wkcnt.argmax())
+        raise ValueError(
+            f"{site + ': ' if site else ''}max_nnz={max_nnz} < live K-blocks "
+            f"({tight}) at output column ni={ni} — a truncated kidx would "
+            f"silently drop live MACs")
+    wkidx = np.zeros((tn, max_nnz), np.int32)
+    for ni in range(tn):
+        live = np.nonzero(b[:, ni])[0]
+        wkidx[ni, :live.size] = live
+    return wkidx, wkcnt
+
+
+def weight_plan_meta(wkidx: jax.Array, wkcnt: jax.Array, b_bitmap: jax.Array,
+                     tm: int) -> BlockSparseMeta:
+    """Weight-mode metadata from a plan: pure broadcast, zero weight-side
+    bitmap/argsort work inside jit (the IF bitmap is all-ones)."""
+    tn, max_nnz = wkidx.shape
+    tk = b_bitmap.shape[0]
+    kidx = jnp.broadcast_to(wkidx[None], (tm, tn, max_nnz)).astype(jnp.int32)
+    kcnt = jnp.broadcast_to(wkcnt[None], (tm, tn)).astype(jnp.int32)
+    return BlockSparseMeta(kidx=kidx, kcnt=kcnt,
+                           a_bitmap=jnp.ones((tm, tk), bool),
+                           b_bitmap=b_bitmap, max_nnz=int(max_nnz))
+
+
+def combine_with_activation_meta(a_bitmap: jax.Array, wkidx: jax.Array,
+                                 wkcnt: jax.Array, b_bitmap: jax.Array
+                                 ) -> BlockSparseMeta:
+    """AND a fresh activation bitmap into precomputed weight metadata.
+
+    The CSB for tile (mi, ni) only needs the activation bits at the weight's
+    live K-blocks, so the trace-time work is a gather + compaction over
+    ``max_nnz`` slots instead of a bitmap reduction over the full weight and
+    an argsort over ``tk`` — the weight side is never re-derived or
+    re-argsorted.  Produces entry-for-entry the same metadata as
+    ``build_block_sparse_meta_jnp(a_bitmap, b_bitmap, max_nnz)``.
+    """
+    tn, max_nnz = wkidx.shape
+    tm, tk = a_bitmap.shape
+    slot_live = jnp.arange(max_nnz)[None, :] < wkcnt[:, None]     # (tn, s)
+    gathered = a_bitmap[:, wkidx]                                 # (tm, tn, s)
+    alive = gathered & slot_live[None]
+    kcnt = jnp.sum(alive, axis=-1).astype(jnp.int32)
+    order = jnp.argsort(~alive, axis=-1, stable=True)             # live-first
+    kidx = jnp.take_along_axis(
+        jnp.broadcast_to(wkidx[None], alive.shape), order, axis=-1)
+    pad_mask = jnp.arange(max_nnz)[None, None, :] < kcnt[..., None]
+    kidx = jnp.where(pad_mask, kidx, 0).astype(jnp.int32)
+    return BlockSparseMeta(kidx=kidx, kcnt=kcnt, a_bitmap=a_bitmap,
+                           b_bitmap=b_bitmap, max_nnz=int(max_nnz))
+
+
+def plan_weight(w, *, site: str = "", mode: str = "weight",
+                bm: int = 128, bk: int = 128, bn: int = 128,
+                max_nnz: Optional[int] = None) -> PlannedWeight:
+    """Compile a single (K, N) weight into a :class:`PlannedWeight`."""
+    w_np = np.asarray(w)
+    bbm = block_bitmap(w_np, bk, bn)
+    wkidx, wkcnt = weight_side_lists(bbm, max_nnz, site=site)
+    return PlannedWeight(
+        w=jnp.asarray(w), wkidx=jnp.asarray(wkidx), wkcnt=jnp.asarray(wkcnt),
+        b_bitmap=jnp.asarray(bbm), site=site, mode=mode, bm=bm, bk=bk, bn=bn,
+        max_nnz=int(wkidx.shape[-1]), tk=int(bbm.shape[0]))
+
+
+# keyed by (parent key, leaf key) context in the param pytree — the same
+# names the model code passes to ``flex_matmul(site=...)``
+_PLAN_SITE_KEYS: Dict[str, Dict[str, str]] = {
+    "mlp": {"w_in": "mlp.in", "w_gate": "mlp.gate", "w_out": "mlp.out"},
+    "attn": {"wq": "attn.q", "wkv": "attn.kv", "wo": "attn.out"},
+    "xattn": {"wq": "attn.q", "wkv": "attn.kv", "wo": "attn.out"},
+    "rglru": {"w_x": "rglru.in", "w_gate": "rglru.gate",
+              "w_out": "rglru.out"},
+}
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        key = getattr(p, "key", None)
+        if key is None:
+            key = getattr(p, "name", getattr(p, "idx", p))
+        out.append(str(key))
+    return tuple(out)
+
+
+def _site_for_path(keys: Tuple[str, ...]) -> Optional[str]:
+    if len(keys) < 2:
+        return None
+    return _PLAN_SITE_KEYS.get(keys[-2], {}).get(keys[-1])
+
+
+@dataclass
+class SitePlan:
+    """Precompiled weight-side sparsity metadata for one stacked weight leaf.
+
+    Host-side (numpy) record; ``WeightSparsityPlan.attach`` materializes it
+    as :class:`PlannedWeight` nodes inside the params pytree."""
+    path: Tuple[str, ...]
+    site: str
+    mode: str
+    bm: int
+    bk: int
+    bn: int
+    tk: int
+    tn: int
+    max_nnz: int              # tight: max live K-blocks over layers/columns
+    wkidx: np.ndarray         # (L, tn, max_nnz) int32
+    wkcnt: np.ndarray         # (L, tn) int32
+    b_bitmap: np.ndarray      # (L, tk, tn) bool
+    zvc_values: np.ndarray    # packed non-zeros of the stacked weight
+    zvc_bitmap: np.ndarray    # element bitmap (stacked weight shape)
+    wt_density: float         # element-level non-zero fraction
+    block_density: float      # live weight-block fraction
+    dense_bytes: int
+    zvc_bytes: float
+
+    @property
+    def bytes_saved(self) -> float:
+        return max(self.dense_bytes - self.zvc_bytes, 0.0)
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "site": self.site, "mode": self.mode,
+            "layers": int(self.b_bitmap.shape[0]),
+            "blocks": [self.bm, self.bk, self.bn],
+            "max_nnz": self.max_nnz, "tk": self.tk,
+            "wt_density": self.wt_density,
+            "block_density": self.block_density,
+            "dense_bytes": self.dense_bytes,
+            "zvc_bytes": self.zvc_bytes,
+            "bytes_saved": self.bytes_saved,
+        }
+
+
+@dataclass
+class WeightSparsityPlan:
+    """Per-site precompiled weight metadata for a whole network.
+
+    Lifecycle (see ROADMAP "Sparsity dispatch contract"): compiled once at
+    engine bring-up from the actual params (``compile_weight_plan``),
+    attached into the params pytree (``attach``) so the jitted decode step
+    receives the metadata as ordinary arrays, and complemented at runtime by
+    activation-bitmap popcounts fed back for density calibration.
+    """
+    arch: str = ""
+    shape: str = ""
+    entries: Dict[str, SitePlan] = field(default_factory=dict)
+
+    def attach(self, params, *, verify: bool = True):
+        """Wrap every planned weight leaf in ``params`` as PlannedWeight.
+
+        ``verify`` recomputes each leaf's block bitmap and checks the plan
+        covers every live block — a plan compiled from *different* tensors
+        of the same shape would otherwise silently skip live MACs.  A
+        strictly conservative plan (extra live bits) is allowed: the kernel
+        then MACs some zero blocks but stays exact.
+        """
+        def wrap(path, leaf):
+            key = "/".join(_path_keys(path))
+            e = self.entries.get(key)
+            if e is None:
+                return leaf
+            if verify:
+                w = np.asarray(leaf)
+                live = np.stack([block_bitmap(w[l], e.bk, e.bn)
+                                 for l in range(w.shape[0])])
+                if not np.all(e.b_bitmap | ~live):
+                    raise ValueError(
+                        f"{key} [{e.site}]: plan does not cover the attached "
+                        f"weight's live blocks — it was compiled from "
+                        f"different tensors; rebuild with "
+                        f"compile_weight_plan on these params")
+            return PlannedWeight(
+                w=leaf, wkidx=jnp.asarray(e.wkidx),
+                wkcnt=jnp.asarray(e.wkcnt), b_bitmap=jnp.asarray(e.b_bitmap),
+                site=e.site, mode=e.mode, bm=e.bm, bk=e.bk, bn=e.bn,
+                max_nnz=e.max_nnz, tk=e.tk)
+        return jax.tree_util.tree_map_with_path(wrap, params)
+
+    def wt_densities(self) -> Dict[str, float]:
+        """Measured per-site element density (size-weighted over entries) —
+        replaces the profile prior in the schedule selector."""
+        nnz: Dict[str, float] = {}
+        size: Dict[str, float] = {}
+        for e in self.entries.values():
+            nnz[e.site] = nnz.get(e.site, 0.0) + float(e.zvc_values.size)
+            size[e.site] = size.get(e.site, 0.0) + float(e.zvc_bitmap.size)
+        return {s: nnz[s] / size[s] for s in size if size[s]}
+
+    def stats(self) -> Dict[str, Dict[str, object]]:
+        return {"/".join(e.path): e.stats() for e in self.entries.values()}
+
+    def describe(self) -> str:
+        lines = [f"# WeightSparsityPlan {self.arch} @ {self.shape}"]
+        for key, e in self.entries.items():
+            lines.append(
+                f"  {key} [{e.site}/{e.mode}]: max_nnz={e.max_nnz}/{e.tk} "
+                f"wt_density={e.wt_density:.2f} "
+                f"zvc {e.zvc_bytes/2**10:.1f}KiB/{e.dense_bytes/2**10:.1f}KiB")
+        return "\n".join(lines)
+
+
+def measure_weight_densities(params, schedules) -> Dict[str, float]:
+    """Per-site element density of the actual param tensors.
+
+    The cheap first pass of plan bring-up: a nonzero count per planned
+    leaf — no ZVC packing, block bitmaps or index lists — so the schedule
+    can be re-selected under measured densities before the (single) full
+    ``compile_weight_plan`` at the final block granularity.
+    """
+    nnz: Dict[str, float] = {}
+    size: Dict[str, float] = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        site = _site_for_path(_path_keys(path))
+        if site is None or site not in schedules.sites:
+            continue
+        if schedules.sites[site].sparsity_mode not in ("weight",
+                                                       "two_sided"):
+            continue
+        if getattr(leaf, "ndim", 0) != 3:
+            continue
+        w = np.asarray(leaf)
+        nnz[site] = nnz.get(site, 0.0) + float(np.count_nonzero(w))
+        size[site] = size.get(site, 0.0) + float(w.size)
+    return {s: nnz[s] / size[s] for s in size if size[s]}
+
+
+def compile_weight_plan(params, schedules, *,
+                        max_nnz: Optional[Dict[str, int]] = None
+                        ) -> WeightSparsityPlan:
+    """Compile a :class:`WeightSparsityPlan` from the actual param tensors.
+
+    Walks the param pytree, matches stacked (L, K, N) weight leaves to their
+    descriptor-table sites (``schedules`` is a
+    ``core.descriptors.NetworkSchedule``), and precomputes per layer the
+    block bitmap, ZVC packing and per-column live-K lists at the site
+    schedule's block granularity.  ``max_nnz`` optionally caps a site's
+    bound; a cap below the tightest feasible value raises ``ValueError``
+    naming the site and (layer, column) coordinates.
+    """
+    plan = WeightSparsityPlan(arch=schedules.arch, shape=schedules.shape)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        keys = _path_keys(path)
+        site = _site_for_path(keys)
+        if site is None or site not in schedules.sites:
+            continue
+        d = schedules.sites[site]
+        if d.sparsity_mode not in ("weight", "two_sided"):
+            continue
+        if getattr(leaf, "ndim", 0) != 3:
+            continue                       # only stacked 2-D matmul weights
+        w = np.asarray(leaf)
+        n_layers, k, n = w.shape
+        bm = max(min(d.schedule.bm, d.m), 1)
+        bk = max(min(d.schedule.bk, k), 1)
+        bn = max(min(d.schedule.bn, n), 1)
+        bmaps = np.stack([block_bitmap(w[l], bk, bn)
+                          for l in range(n_layers)])
+        tk, tn = bmaps.shape[1:]
+        cap = (max_nnz or {}).get(site)
+        site_nnz = cap if cap is not None else max(int(bmaps.sum(1).max()), 1)
+        wkidx = np.zeros((n_layers, tn, site_nnz), np.int32)
+        wkcnt = np.zeros((n_layers, tn), np.int32)
+        for l in range(n_layers):
+            wkidx[l], wkcnt[l] = weight_side_lists(
+                bmaps[l], site_nnz, site=f"{site}[layer {l}]")
+        vals, ebm = zvc_encode_np(w)
+        elem_bytes = w.dtype.itemsize
+        plan.entries["/".join(keys)] = SitePlan(
+            path=keys, site=site, mode=d.sparsity_mode,
+            bm=bm, bk=bk, bn=bn, tk=tk, tn=tn, max_nnz=site_nnz,
+            wkidx=wkidx, wkcnt=wkcnt, b_bitmap=bmaps,
+            zvc_values=vals, zvc_bitmap=ebm,
+            wt_density=float(vals.size) / max(w.size, 1),
+            block_density=float(bmaps.mean()),
+            dense_bytes=int(w.size * elem_bytes),
+            zvc_bytes=vals.size * elem_bytes + w.size / 8.0)
+    return plan

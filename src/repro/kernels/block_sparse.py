@@ -17,14 +17,18 @@ both the energy and the cycle win of the paper, at tile granularity.
 Cycles ∝ Σ kcnt (vs tm·tn·tk dense): ``meta.skip_fraction`` is the measured
 block-CSB skip rate.
 
-Two entry points honor the same contract (see ``core.descriptors``):
+Three entry points honor the same contract (see ``core.descriptors``):
 ``kernels.ops.block_sparse_matmul`` passes *precomputed* host-built metadata
 (``build_block_sparse_meta``); the descriptor-driven ``ops.flex_matmul``
 dispatch builds metadata *at trace time* (``build_block_sparse_meta_jnp``)
-with ``max_nnz = tk`` — traced ``kidx``/``kcnt`` are fine (scalar-prefetch
-operands), only ``max_nnz`` and the block shapes must be static.  Dead tiles
-(kcnt == 0) MAC one clamped block; with data-derived bitmaps that block is
-all-zero on at least one side, so the contribution is exactly 0.
+with ``max_nnz = tk``; and the weight-plan path (``core.sparsity
+.PlannedWeight`` attached at engine bring-up) supplies the weight-side
+lists as jit inputs and runs the plan's *tight* static ``max_nnz`` ≤ tk —
+shrinking the kernel's s-grid to the real worst-case live K-count.  Traced
+``kidx``/``kcnt`` are fine (scalar-prefetch operands), only ``max_nnz`` and
+the block shapes must be static.  Dead tiles (kcnt == 0) MAC one clamped
+block; with data-derived bitmaps that block is all-zero on at least one
+side, so the contribution is exactly 0.
 """
 from __future__ import annotations
 

@@ -11,26 +11,46 @@ for stationarity + block shapes; the XLA path leaves tiling to XLA while the
 
 Sparsity dispatch (the §III-D wiring): when the site's descriptor carries
 ``sparsity_mode`` of ``weight`` or ``two_sided``, the site routes through
-the block-sparse path instead of the dense matmul.  CSB metadata is built
-*at trace time* from the operand block bitmaps at the schedule's
-(bm, bk, bn) granularity — so per-layer weight slices inside a scan each get
-their own bitmap, and runtime activation sparsity is seen by ``two_sided``
-sites.  ``weight`` mode uses an all-ones activation bitmap (FL-side skipping
-only).  On the Pallas path the scalar-prefetch kernel in
-``kernels.block_sparse`` chases the compressed K-index lists (the CAG-unit
-analogue); on CPU the masked-XLA oracle computes the same skip semantics.
-Bitmaps derived from the data make every mode numerically identical to the
-dense product — zero blocks are skipped, never approximated.
+the block-sparse path instead of the dense matmul.  Two sources of CSB
+metadata:
+
+  * **Precompiled plan** — when the weight arrives as a
+    ``core.sparsity.PlannedWeight`` (the engine attached a
+    ``WeightSparsityPlan`` into the params pytree at bring-up), the
+    weight-side bitmaps and live-K lists are ordinary jit inputs; only the
+    *activation-side* bitmap is derived at trace time, ANDed in via
+    ``combine_with_activation_meta`` (two_sided) or broadcast without any
+    sort (weight mode).  The kernel grid runs the plan's tight static
+    ``max_nnz`` ≤ tk.
+  * **Trace time** — without a plan, metadata is built from the operand
+    block bitmaps at the schedule's (bm, bk, bn) granularity with the safe
+    ``max_nnz = tk`` bound — so per-layer weight slices inside a scan each
+    get their own bitmap, rebuilt every step.
+
+``weight`` mode uses an all-ones activation bitmap (FL-side skipping only).
+On the Pallas path the scalar-prefetch kernel in ``kernels.block_sparse``
+chases the compressed K-index lists (the CAG-unit analogue); on CPU the
+masked-XLA oracle computes the same skip semantics.  Bitmaps derived from
+the data make every mode numerically identical to the dense product — zero
+blocks are skipped, never approximated.
+
+Runtime feedback: when a ``SparsityStatsCollector`` is installed
+(``sparsity_stats``), two-sided sites emit their activation popcounts via
+``jax.debug.callback`` — the measured densities calibrate the scheduler's
+0.5 activation prior (``core.descriptors.sparsity_densities_for``).
 """
 from __future__ import annotations
 
 import contextlib
+import functools
 import threading
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.sparsity import PlannedWeight
 
 _state = threading.local()
 
@@ -42,6 +62,8 @@ class ExecConfig:
     schedules: Optional[object] = None   # NetworkSchedule (descriptor table)
     default_stationarity: str = "output"
     sparse_dispatch: bool = True      # honor SiteDescriptor.sparsity_mode
+    plan: Optional[object] = None     # WeightSparsityPlan (engine bring-up)
+    collect_stats: bool = False       # emit activation popcounts per site
 
 
 def _cfg() -> ExecConfig:
@@ -78,8 +100,73 @@ def site_sparsity_mode(site: str) -> str:
     return desc.sparsity_mode
 
 
+# ---------------------------------------------------------------------------
+# Runtime activation-density feedback (popcount accumulation)
+# ---------------------------------------------------------------------------
+
+class SparsityStatsCollector:
+    """Accumulates per-site activation popcounts emitted from inside the
+    jitted step (via ``jax.debug.callback``) — the runtime half of the
+    density-calibration loop: bring-up plan → decode step → popcount
+    feedback → recompiled schedule."""
+
+    def __init__(self):
+        self._live: Dict[str, int] = {}
+        self._total: Dict[str, int] = {}
+
+    def record(self, site: str, live, total):
+        self._live[site] = self._live.get(site, 0) + int(live)
+        self._total[site] = self._total.get(site, 0) + int(total)
+
+    def densities(self) -> Dict[str, float]:
+        """Measured element-level activation density per site."""
+        return {s: self._live[s] / t
+                for s, t in self._total.items() if t}
+
+
+@contextlib.contextmanager
+def sparsity_stats(collector: SparsityStatsCollector):
+    """Install ``collector`` for the enclosed trace: two-sided sparse sites
+    emit activation popcounts to it at run time."""
+    prev = getattr(_state, "collector", None)
+    _state.collector = collector
+    try:
+        yield collector
+    finally:
+        _state.collector = prev
+
+
+def _record_act_stats(site: str, x2: jax.Array) -> None:
+    col = getattr(_state, "collector", None)
+    if col is None or not site:
+        return
+    live = jnp.sum((x2 != 0).astype(jnp.int32))
+    jax.debug.callback(functools.partial(col.record, site), live, x2.size)
+
+
+def _leading_flat(x: jax.Array):
+    """(..., K) -> ((M, K), lead_shape) with M = prod of leading dims."""
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    return x.reshape(m, x.shape[-1]), lead
+
+
+def _run_block_sparse(xp: jax.Array, wp: jax.Array, meta, cfg: ExecConfig,
+                      m: int, n: int) -> jax.Array:
+    """Shared kernel dispatch + unpad tail for both metadata sources."""
+    from repro.kernels import block_sparse as bs
+    if cfg.use_pallas:
+        out = bs.block_sparse_matmul(xp, wp, meta, interpret=cfg.interpret,
+                                     out_dtype=jnp.float32)
+    else:
+        out = bs.block_sparse_matmul_ref(xp, wp, meta)
+    return out[:m, :n]
+
+
 def _sparse_site_matmul(x2: jax.Array, w: jax.Array, mode: str, sched,
-                        cfg: ExecConfig) -> jax.Array:
+                        cfg: ExecConfig, site: str = "") -> jax.Array:
     """(M, K) @ (K, N) through the CSB block-sparse path.
 
     Block granularity is the site schedule's (bm, bk, bn) clamped to the
@@ -87,7 +174,6 @@ def _sparse_site_matmul(x2: jax.Array, w: jax.Array, mode: str, sched,
     are all-zero → CSB-dead → skipped).  Returns f32.
     """
     from repro.core import sparsity as sparsity_lib
-    from repro.kernels import block_sparse as bs
     from repro.kernels.flex_matmul import DEFAULT_BLOCKS, pad_to_blocks
 
     m, k = x2.shape
@@ -103,15 +189,41 @@ def _sparse_site_matmul(x2: jax.Array, w: jax.Array, mode: str, sched,
     b_bitmap = sparsity_lib.block_bitmap_jnp(wp, bk, bn)
     if mode == "two_sided":
         a_bitmap = sparsity_lib.block_bitmap_jnp(xp, bm, bk)
+        _record_act_stats(site, x2)
     else:                             # weight-sided: IF bitmap all ones
         a_bitmap = jnp.ones((tm, tk), bool)
-    meta = sparsity_lib.build_block_sparse_meta_jnp(a_bitmap, b_bitmap)
-    if cfg.use_pallas:
-        out = bs.block_sparse_matmul(xp, wp, meta, interpret=cfg.interpret,
-                                     out_dtype=jnp.float32)
+    meta = sparsity_lib.build_block_sparse_meta_jnp(a_bitmap, b_bitmap,
+                                                    site=site)
+    return _run_block_sparse(xp, wp, meta, cfg, m, n)
+
+
+def _planned_matmul(x2: jax.Array, pw: PlannedWeight,
+                    cfg: ExecConfig) -> jax.Array:
+    """(M, K) @ planned (K, N): weight-side metadata comes precompiled from
+    the plan (ordinary jit inputs); only the activation bitmap is derived at
+    trace time.  The kernel grid runs the plan's tight static ``max_nnz``.
+    """
+    from repro.core import sparsity as sparsity_lib
+    from repro.kernels.flex_matmul import pad_to_blocks
+
+    m, k = x2.shape
+    n = pw.w.shape[-1]
+    xp = pad_to_blocks(x2, pw.bm, pw.bk)
+    wp = pad_to_blocks(pw.w, pw.bk, pw.bn)
+    tm, tk = xp.shape[0] // pw.bm, xp.shape[1] // pw.bk
+    if tk != pw.tk:
+        raise ValueError(
+            f"{pw.site}: plan compiled for tk={pw.tk} K-blocks of {pw.bk}, "
+            f"operand K={k} gives {tk} — rebuild the plan for these shapes")
+    if pw.mode == "two_sided":
+        a_bitmap = sparsity_lib.block_bitmap_jnp(xp, pw.bm, pw.bk)
+        meta = sparsity_lib.combine_with_activation_meta(
+            a_bitmap, pw.wkidx, pw.wkcnt, pw.b_bitmap)
+        _record_act_stats(pw.site, x2)
     else:
-        out = bs.block_sparse_matmul_ref(xp, wp, meta)
-    return out[:m, :n]
+        meta = sparsity_lib.weight_plan_meta(pw.wkidx, pw.wkcnt,
+                                             pw.b_bitmap, tm)
+    return _run_block_sparse(xp, wp, meta, cfg, m, n)
 
 
 def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
@@ -119,26 +231,32 @@ def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
     """x (..., K) @ w (K, N) through the schedule-flexible matmul.
 
     Dispatch order (descriptor → ops → kernel):
-      1. site descriptor says ``weight``/``two_sided`` → block-sparse path
-         (Pallas kernel or masked-XLA oracle; see module docstring),
-      2. Pallas enabled → ``kernels.flex_matmul`` with the site's
+      1. ``w`` is a ``PlannedWeight`` (precompiled weight-sparsity plan) →
+         block-sparse path with the plan's static per-site ``max_nnz``; no
+         weight-side bitmap/argsort ops are traced,
+      2. site descriptor says ``weight``/``two_sided`` → block-sparse path
+         with trace-time metadata (Pallas kernel or masked-XLA oracle; see
+         module docstring),
+      3. Pallas enabled → ``kernels.flex_matmul`` with the site's
          (stationarity, block shapes),
-      3. otherwise dot_general (tiling delegated to XLA; sharding-level
+      4. otherwise dot_general (tiling delegated to XLA; sharding-level
          schedule still applies upstream).
     """
     cfg = _cfg()
+    if isinstance(w, PlannedWeight):
+        if cfg.sparse_dispatch and w.w.ndim == 2 and x.ndim >= 2:
+            x2, lead = _leading_flat(x)
+            out = _planned_matmul(x2, w, cfg)
+            return out.reshape(*lead, w.w.shape[-1]).astype(x.dtype)
+        w = w.w                        # plan disabled → dense fallback
     desc = _site_descriptor(site, cfg) if cfg.sparse_dispatch else None
     sparse = (desc is not None and w.ndim == 2
               and desc.sparsity_mode in ("weight", "two_sided"))
     if (sparse or cfg.use_pallas) and x.ndim >= 2:
-        lead = x.shape[:-1]
-        m = 1
-        for d in lead:
-            m *= d
-        x2 = x.reshape(m, x.shape[-1])
+        x2, lead = _leading_flat(x)
         if sparse:
             out = _sparse_site_matmul(x2, w, desc.sparsity_mode,
-                                      desc.schedule, cfg)
+                                      desc.schedule, cfg, site)
         else:
             from repro.kernels import flex_matmul as fm
             out = fm.flex_matmul(x2, w, schedule=site_schedule(site),

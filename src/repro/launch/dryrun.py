@@ -28,7 +28,7 @@ import traceback
 import jax
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config, shape_applicable
-from repro.core.descriptors import compile_network_schedule
+from repro.core.descriptors import compile_network_schedule, site_plan_estimate
 from repro.launch.mesh import make_production_mesh
 from repro.launch.step_builders import build_cell_step, lower_cell
 from repro.roofline.hlo import f32_upcast_bytes, parse_collectives
@@ -70,8 +70,13 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
     coll = parse_collectives(hlo, n_dev)
 
     # per-site descriptor table (§III-A registers): the chosen dataflow +
-    # sparsity mode per matmul site, observable alongside the XLA analysis
-    ns = compile_network_schedule(get_config(arch_id), SHAPES[shape_name],
+    # sparsity mode per matmul site, observable alongside the XLA analysis.
+    # "plan" records the weight-sparsity-plan economics per site (density,
+    # tight max_nnz vs tk, ZVC bytes saved) — modeled from the config prior,
+    # since the dry-run lowers against ShapeDtypeStructs (no real params);
+    # engines with params measure the same stats via WeightSparsityPlan.
+    arch_cfg = get_config(arch_id)
+    ns = compile_network_schedule(arch_cfg, SHAPES[shape_name],
                                   model_shards=int(dict(mesh.shape)
                                                    .get("model", 1)))
     sites = {
@@ -83,6 +88,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
             "sparsity_mode": d.sparsity_mode,
             "hbm_bytes": d.schedule.hbm_bytes,
             "flops": d.schedule.flops,
+            "plan": site_plan_estimate(d, arch_cfg),
         } for name, d in ns.sites.items()}
     # XLA:CPU float-normalization inflation (absent on the TPU target):
     # hoisted f32 copies of bf16 scan-carried weights/caches.  Subtract a

@@ -103,14 +103,18 @@ def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Params:
 
 def rglru_decode_step(p: Params, cfg: ArchConfig, x: jax.Array,
                       state: Params) -> Tuple[jax.Array, Params]:
-    """x (B,1,D); state {h (B,W), conv (B,K-1,W)}."""
-    xb = (x[:, 0] @ p["w_x"])
-    gate = x[:, 0] @ p["w_gate"]
+    """x (B,1,D); state {h (B,W), conv (B,K-1,W)}.
+
+    Matmuls go through ``flex_matmul`` with the same site names as the
+    full-sequence path, so descriptor-table dispatch and precompiled weight
+    plans apply to decode as well."""
+    xb = ops.flex_matmul(x[:, 0], p["w_x"], site="rglru.in")
+    gate = ops.flex_matmul(x[:, 0], p["w_gate"], site="rglru.gate")
     win = jnp.concatenate([state["conv"], xb[:, None].astype(state["conv"].dtype)],
                           axis=1)
     xc = (win * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
     a, gated = _gates(p, xc)
     h = a * state["h"] + gated
     y = h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
-    out = (y @ p["w_out"])[:, None]
+    out = ops.flex_matmul(y, p["w_out"], site="rglru.out")[:, None]
     return out, {"h": h, "conv": win[:, 1:]}

@@ -15,10 +15,18 @@ is installed around every decode trace, so the engine's matmul sites consult
 their ``SiteDescriptor`` — per-site stationarity and ``weight``/``two_sided``
 block-sparse dispatch run inside the jitted decode step.
 ``decode_exec_config`` compiles the decode-shape ``NetworkSchedule`` for an
-arch (the descriptor-register update at engine bring-up, §III-A).
+arch (the descriptor-register update at engine bring-up, §III-A); given the
+actual ``params`` it also compiles a ``WeightSparsityPlan`` — the static CSB
+weight metadata is hoisted to bring-up, the schedule is re-selected under
+the *measured* per-site weight densities, and ``ServeEngine`` attaches the
+plan into the params pytree so the jitted decode step receives it as
+ordinary arrays (no weight-side bitmap/argsort work per token).  Runtime
+activation-bitmap popcounts are accumulated per site
+(``activation_densities``) to calibrate the scheduler's activation prior.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -34,19 +42,45 @@ from repro.models import model as model_lib
 def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
                        model_shards: int = 1,
                        use_pallas: bool = False,
-                       interpret: bool = False) -> ops.ExecConfig:
+                       interpret: bool = False,
+                       params=None,
+                       collect_stats: bool = False,
+                       act_densities: Optional[Dict[str, float]] = None,
+                       ) -> ops.ExecConfig:
     """ExecConfig carrying the decode-shape descriptor table for ``cfg``.
 
     The schedule compiler sees M = n_slots (one new token per live slot);
     sparsity modes/densities flow from ``cfg.sparsity`` via
     ``compile_network_schedule``.
+
+    With ``params``, a ``WeightSparsityPlan`` is compiled at bring-up: the
+    descriptor table is first built under the density priors, a cheap
+    nonzero-count pass measures each site's actual weight density, the
+    schedule is re-selected under the measured densities, and the plan is
+    compiled once at the final block granularity.  ``act_densities`` feeds
+    measured runtime activation densities
+    (``ServeEngine.activation_densities``) back into the selector;
+    ``collect_stats`` makes the engine accumulate those popcounts.
     """
-    from repro.core.descriptors import compile_network_schedule
+    from repro.core.descriptors import (compile_network_schedule,
+                                        sparsity_mode_for)
+    from repro.core.sparsity import (compile_weight_plan,
+                                     measure_weight_densities)
     shape = ShapeConfig(name="serve_decode", kind="decode", seq_len=1,
                         global_batch=n_slots)
-    ns = compile_network_schedule(cfg, shape, model_shards=model_shards)
+    ns = compile_network_schedule(cfg, shape, model_shards=model_shards,
+                                  act_densities=act_densities)
+    plan = None
+    if params is not None and sparsity_mode_for(cfg) != "dense":
+        measured = measure_weight_densities(params, ns)
+        if measured:
+            ns = compile_network_schedule(
+                cfg, shape, model_shards=model_shards,
+                wt_densities=measured, act_densities=act_densities)
+            plan = compile_weight_plan(params, ns)
     return ops.ExecConfig(use_pallas=use_pallas, interpret=interpret,
-                          schedules=ns)
+                          schedules=ns, plan=plan,
+                          collect_stats=collect_stats)
 
 
 @dataclass
@@ -67,7 +101,8 @@ class _Slot:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_seq: int = 256, dtype=jnp.float32,
-                 exec_cfg: Optional[ops.ExecConfig] = None):
+                 exec_cfg: Optional[ops.ExecConfig] = None,
+                 verify_plan: bool = True):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.exec_cfg = exec_cfg
@@ -76,16 +111,44 @@ class ServeEngine:
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: List[Request] = []
         self._uid = 0
+        # weight-plan bring-up: attach precompiled CSB metadata into the
+        # params pytree so the jitted step gets it as ordinary arrays.
+        # verify_plan=False skips the coverage re-check (an extra
+        # O(all-weights) host pass) when the plan was just compiled from
+        # these exact params
+        self.plan = getattr(exec_cfg, "plan", None)
+        self._exec_params = (self.plan.attach(params, verify=verify_plan)
+                             if self.plan is not None else params)
+        self._stats = (ops.SparsityStatsCollector()
+                       if exec_cfg is not None and exec_cfg.collect_stats
+                       else None)
 
         def _decode_fn(p, t, s, pos):
             if self.exec_cfg is None:
                 return model_lib.decode_step(p, cfg, t, s, pos)
             # thread-local exec config is read at trace time; installing it
             # here scopes the descriptor table to this engine's decode step
-            with ops.exec_config(self.exec_cfg):
+            with contextlib.ExitStack() as scopes:
+                scopes.enter_context(ops.exec_config(self.exec_cfg))
+                if self._stats is not None:
+                    scopes.enter_context(ops.sparsity_stats(self._stats))
                 return model_lib.decode_step(p, cfg, t, s, pos)
 
         self._decode = jax.jit(_decode_fn)
+
+    def activation_densities(self) -> Dict[str, float]:
+        """Measured per-site activation densities from runtime bitmap
+        popcounts (requires ``ExecConfig.collect_stats``) — feed back into
+        ``decode_exec_config(act_densities=...)`` to recalibrate the
+        schedule selector's 0.5 prior.
+
+        Popcounts aggregate over the whole decode batch, including idle
+        slots (which carry token-0 filler rows) — calibrate from a busy
+        engine, or treat low-occupancy measurements as approximate."""
+        if self._stats is None:
+            return {}
+        jax.effects_barrier()        # flush in-flight debug callbacks
+        return self._stats.densities()
 
     # ---- request management ----
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
@@ -115,7 +178,8 @@ class ServeEngine:
             for t, tok in enumerate(req.prompt[:-1]):
                 tok_b = jnp.zeros((self.n_slots, 1), jnp.int32
                                   ).at[i, 0].set(int(tok))
-                _, self.state = self._decode(self.params, tok_b, self.state,
+                _, self.state = self._decode(self._exec_params, tok_b,
+                                             self.state,
                                              jnp.asarray(t, jnp.int32))
             self.state = jax.tree.map(
                 lambda old, new: old.at[:, i].set(new[:, i]),
@@ -141,8 +205,8 @@ class ServeEngine:
             hist = (list(s.req.prompt) + s.req.out)
             toks[i, 0] = hist[s.pos] if s.pos < len(hist) else hist[-1]
         pos = max(self.slots[i].pos for i in live)
-        logits, self.state = self._decode(self.params, jnp.asarray(toks),
-                                          self.state,
+        logits, self.state = self._decode(self._exec_params,
+                                          jnp.asarray(toks), self.state,
                                           jnp.asarray(pos, jnp.int32))
         out = {}
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))

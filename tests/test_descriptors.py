@@ -61,6 +61,27 @@ def test_sparsity_mode_propagates_from_arch_config(sp, expect):
         assert d.schedule.sparsity_mode == expect, d.site
 
 
+def test_gate_sites_in_descriptor_table():
+    """mlp.gate / rglru.gate get their own descriptor-table entries,
+    sharing the corresponding .in site's (M, N, K) (ROADMAP open item)."""
+    ns = compile_network_schedule(get_config("gemma-2b"),
+                                  SHAPES["decode_32k"])
+    assert "mlp.gate" in ns.sites
+    g, i = ns.sites["mlp.gate"], ns.sites["mlp.in"]
+    assert (g.m, g.n, g.k) == (i.m, i.n, i.k)
+
+    ns = compile_network_schedule(get_config("recurrentgemma-9b"),
+                                  SHAPES["decode_32k"])
+    assert "rglru.gate" in ns.sites
+    g, i = ns.sites["rglru.gate"], ns.sites["rglru.in"]
+    assert (g.m, g.n, g.k) == (i.m, i.n, i.k)
+
+    # non-gated MLPs (whisper) have no gate matmul → no gate site
+    ns = compile_network_schedule(get_config("whisper-tiny"),
+                                  SHAPES["decode_32k"])
+    assert "mlp.gate" not in ns.sites
+
+
 def test_sparsity_densities_for():
     cfg = dataclasses.replace(
         get_config("gemma-2b"),

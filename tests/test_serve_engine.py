@@ -65,6 +65,28 @@ def test_two_sided_engine_matches_dense_tokens(cfg_and_params):
     assert list(dense.values()) == list(sparse.values())
 
 
+def test_weight_plan_engine_matches_dense_tokens(cfg_and_params):
+    """Engine with a precompiled WeightSparsityPlan (weight metadata hoisted
+    to bring-up) emits exactly the PR-1 engines' token streams."""
+    cfg, params = cfg_and_params
+    sp_cfg = dataclasses.replace(
+        cfg, sparsity=SparsityConfig(weight_sparsity=0.5,
+                                     activation_threshold=0.1))
+    exec_cfg = decode_exec_config(sp_cfg, n_slots=2, params=params)
+    assert exec_cfg.plan is not None and exec_cfg.plan.entries
+    assert all(e.max_nnz <= e.tk for e in exec_cfg.plan.entries.values())
+
+    prompts = [np.array([3, 5, 7], np.int32), np.array([2, 4, 6], np.int32)]
+    outs = []
+    for ec in (None, exec_cfg):
+        eng = _engine(cfg, params, n_slots=2, exec_cfg=ec)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        outs.append(eng.run_until_drained())
+    dense, planned = outs
+    assert list(dense.values()) == list(planned.values())
+
+
 def test_two_sided_decode_step_matches_dense_logits(cfg_and_params):
     """One decode step, logits-level: dense vs two_sided dispatch."""
     cfg, params = cfg_and_params

@@ -7,6 +7,7 @@ import pytest
 from conftest import given, settings, strategies as st
 
 from repro.core import sparsity as S
+from repro.kernels.ref import block_sparse_matmul_ref
 
 ARRS = st.integers(1, 6).flatmap(
     lambda r: st.integers(1, 6).map(lambda c: (r * 8, c * 8)))
@@ -122,6 +123,70 @@ def test_block_meta_consistency(seed, sp):
             for s_ in range(kcnt[mi, ni]):
                 assert csb[mi, ni, kidx[mi, ni, s_]]
     assert 0.0 <= meta.skip_fraction <= 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(tm=st.integers(1, 5), tk=st.integers(1, 6), tn=st.integers(1, 5),
+       da=st.floats(0.0, 1.0), dw=st.floats(0.0, 1.0),
+       tight=st.booleans(), seed=st.integers(0, 2**16))
+def test_jnp_meta_builder_matches_numpy_oracle(tm, tk, tn, da, dw, tight,
+                                               seed):
+    """Property: the trace-time builder agrees entry-for-entry with the
+    numpy oracle across random shapes/densities — with the oracle's tight
+    ``max_nnz`` (which may be < tk) and with the tk upper bound, whose extra
+    padded entries must stay zero.  Density 0 covers all-zero tiles."""
+    rng = np.random.default_rng(seed)
+    bm, bk, bn = 8, 8, 8
+    a = rng.normal(size=(tm * bm, tk * bk)).astype(np.float32) \
+        * (rng.random((tm * bm, tk * bk)) < da)
+    b = rng.normal(size=(tk * bk, tn * bn)).astype(np.float32) \
+        * (rng.random((tk * bk, tn * bn)) < dw)
+    meta_np = S.build_block_sparse_meta(a, b, bm, bk, bn)
+    nnz = meta_np.max_nnz if tight else tk
+    meta_j = S.build_block_sparse_meta_jnp(meta_np.a_bitmap,
+                                           meta_np.b_bitmap, max_nnz=nnz)
+    np.testing.assert_array_equal(np.asarray(meta_j.kcnt),
+                                  np.asarray(meta_np.kcnt))
+    np.testing.assert_array_equal(
+        np.asarray(meta_j.kidx)[..., :meta_np.max_nnz],
+        np.asarray(meta_np.kidx))
+    assert np.all(np.asarray(meta_j.kidx)[..., meta_np.max_nnz:] == 0)
+    # both describe the exact product through the oracle kernel
+    out = np.asarray(block_sparse_matmul_ref(jnp.asarray(a), jnp.asarray(b),
+                                             meta_j))
+    np.testing.assert_allclose(out, a @ b, rtol=2e-5, atol=2e-4)
+
+
+def test_meta_builders_all_zero_tile():
+    """Edge case: fully zero operands — kcnt all zero, max_nnz floors at 1,
+    the kernel contract still yields an exactly-zero product."""
+    a = np.zeros((16, 16), np.float32)
+    b = np.zeros((16, 8), np.float32)
+    meta_np = S.build_block_sparse_meta(a, b, 8, 8, 8)
+    assert meta_np.max_nnz == 1
+    assert int(np.asarray(meta_np.kcnt).sum()) == 0
+    meta_j = S.build_block_sparse_meta_jnp(meta_np.a_bitmap,
+                                           meta_np.b_bitmap,
+                                           max_nnz=meta_np.max_nnz)
+    np.testing.assert_array_equal(np.asarray(meta_j.kidx),
+                                  np.asarray(meta_np.kidx))
+    np.testing.assert_array_equal(np.asarray(meta_j.kcnt),
+                                  np.asarray(meta_np.kcnt))
+
+
+@settings(max_examples=15, deadline=None)
+@given(tk=st.integers(2, 6), tn=st.integers(1, 5),
+       max_live=st.integers(1, 3), seed=st.integers(0, 2**16))
+def test_prune_k_blocks_bounds_live_count(tk, tn, max_live, seed):
+    rng = np.random.default_rng(seed)
+    bk = bn = 8
+    w = rng.normal(size=(tk * bk, tn * bn)).astype(np.float32)
+    out = S.prune_k_blocks(w, bk, bn, max_live)
+    bm_ = S.block_bitmap(out, bk, bn)
+    assert int(bm_.sum(axis=0).max()) <= min(max_live, tk)
+    # surviving blocks are untouched
+    nz = out != 0
+    np.testing.assert_array_equal(out[nz], w[nz])
 
 
 # ---------------------------------------------------------------------------
