@@ -10,7 +10,9 @@ For each sparsity profile this measures, on CPU:
     (``two_sided_plan``: weight metadata hoisted out of the trace, tight
     ``max_nnz``) — the planned vs trace-time latency comparison,
   * **engine step time** — ``serve.engine.ServeEngine`` decode steps with a
-    dense vs ``two_sided`` vs plan-backed exec config on a smoke LM,
+    dense vs ``two_sided`` vs plan-backed exec config on a smoke LM, plus a
+    smoke *MoE* engine (batched-expert einsums + per-expert plans through
+    the same dispatch; ``engine_moe`` in the report),
   * **modeled energy + cycles** — the paper's own evaluation framework
     (``core.energy_model``) on the equivalent layer, per sparsity variant,
   * **modeled HBM traffic / roofline time** — the TPU-native schedule
@@ -42,7 +44,8 @@ from repro.core.flextree import ReduceConfig
 from repro.core.scheduler import (MatmulSchedule, optimize_layer,
                                   roofline_time, select_matmul_schedule)
 from repro.core.sparsity import (build_block_sparse_meta, plan_weight,
-                                 prune_magnitude, zvc_compressed_bytes)
+                                 prune_magnitude, prune_stacked_magnitude,
+                                 zvc_compressed_bytes)
 from repro.kernels import ops
 from repro.models import model as model_lib
 from repro.serve.engine import ServeEngine, decode_exec_config
@@ -154,17 +157,13 @@ def bench_site(profile: dict, m=256, k=512, n=1024,
 
 
 def _prune_stack(params, wt_sp: float, block=(16, 16)):
-    """Block-magnitude-prune every stacked matmul weight (L, d_in, d_out)
-    so the engine's data-derived bitmaps see real sparsity; embeddings,
-    norms and gate vectors (ndim < 3) are left dense."""
-    def prune(leaf):
-        if leaf.ndim != 3:
-            return leaf
-        w = np.asarray(leaf)
-        out = np.stack([prune_magnitude(w[i], wt_sp, block=block)
-                        for i in range(w.shape[0])])
-        return jnp.asarray(out, leaf.dtype)
-    return {**params, "stack": jax.tree.map(prune, params["stack"])}
+    """Block-magnitude-prune every stacked matmul weight — (L, d_in, d_out)
+    leaves and 4-D (L, E, d_in, d_out) MoE expert tensors — so the engine's
+    data-derived bitmaps see real sparsity; embeddings, norms and gate
+    vectors (ndim < 3) are left dense."""
+    return {**params, "stack": jax.tree.map(
+        lambda leaf: prune_stacked_magnitude(leaf, wt_sp, block=block),
+        params["stack"])}
 
 
 def bench_engine(profile: dict, arch="stablelm-1.6b", n_steps=12
@@ -223,8 +222,13 @@ def run(out_path: str, verbose: bool = True,
     for name, prof in profiles.items():
         site = bench_site(prof, **site_kw)
         eng = bench_engine(prof, n_steps=n_steps)
+        # MoE engine: the batched-expert einsum sites + per-expert plans go
+        # through the same planned dispatch (ISSUE 4 total coverage) — part
+        # of the --quick CI smoke so the perf trajectory stays inspectable
+        eng_moe = bench_engine(prof, arch="deepseek-moe-16b",
+                               n_steps=n_steps)
         report["profiles"][name] = {"config": prof, "site": site,
-                                    "engine": eng}
+                                    "engine": eng, "engine_moe": eng_moe}
         if verbose:
             st = site["step_time_s"]
             md = site["modeled"]
@@ -248,6 +252,12 @@ def run(out_path: str, verbose: bool = True,
                   f"two_sided={es['two_sided']*1e3:.2f} ms "
                   f"planned={es['two_sided_plan']*1e3:.2f} ms "
                   f"(tokens match: {eng['tokens_match_dense']})")
+            em = eng_moe["step_time_s"]
+            print(f"  moe engine ({eng_moe['arch']}): "
+                  f"dense={em['dense']*1e3:.2f} ms "
+                  f"two_sided={em['two_sided']*1e3:.2f} ms "
+                  f"planned={em['two_sided_plan']*1e3:.2f} ms "
+                  f"(tokens match: {eng_moe['tokens_match_dense']})")
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
@@ -270,6 +280,12 @@ def validate(report: Dict[str, object]) -> list:
             failures.append(f"{name}: no block skipping measured")
         if not r["engine"]["tokens_match_dense"]:
             failures.append(f"{name}: engine tokens diverged")
+        if not r["engine_moe"]["tokens_match_dense"]:
+            failures.append(f"{name}: MoE engine tokens diverged")
+        moe_plan = r["engine_moe"].get("plan_sites", {})
+        if not any(v.get("experts") for v in moe_plan.values()):
+            failures.append(f"{name}: no per-expert plan entries in the "
+                            f"MoE engine report")
     return failures
 
 

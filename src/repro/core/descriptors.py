@@ -102,20 +102,35 @@ def matmul_sites(cfg: ArchConfig, shape: ShapeConfig,
         ("attn.kv", tokens, 2 * max(cfg.n_kv_heads // ms, 1) * hd, d),
         ("attn.out", tokens, d, cfg.n_heads * hd // ms),
     ]
+
+    def mlp_sites() -> List[Tuple[str, int, int, int]]:
+        out = [("mlp.in", tokens, 3 * cfg.d_ff // ms, d)]
+        if cfg.act != "gelu_plain":    # gated MLPs: gate shares mlp.in dims
+            out.append(("mlp.gate", tokens, 3 * cfg.d_ff // ms, d))
+        out.append(("mlp.out", tokens, d, cfg.d_ff // ms))
+        return out
+
     if cfg.moe.enabled:
         sites.append(("moe.router", tokens, cfg.moe.n_experts, d))
         cap = int(tokens * cfg.moe.top_k / cfg.moe.n_experts
                   * cfg.moe.capacity_factor) + 1
-        sites.append(("moe.expert_in", cap, 3 * cfg.moe.expert_d_ff, d))
-        sites.append(("moe.expert_out", cap, d, cfg.moe.expert_d_ff))
+        f = cfg.moe.expert_d_ff
+        # batched-expert einsum sites (E, C, K) × (E, K, N): per-expert
+        # (M, N, K) with M = capacity-padded tokens per expert; one schedule
+        # (and one PlannedWeight max_nnz) shared across the E experts
+        sites.append(("moe.experts_in", cap, f, d))
+        sites.append(("moe.experts_gate", cap, f, d))
+        sites.append(("moe.experts_out", cap, d, f))
         if cfg.moe.n_shared:
-            sites.append(("moe.shared_in", tokens,
-                          3 * cfg.moe.expert_d_ff * cfg.moe.n_shared // ms, d))
+            fs = f * cfg.moe.n_shared
+            sites.append(("moe.shared_in", tokens, fs // ms, d))
+            sites.append(("moe.shared_gate", tokens, fs // ms, d))
+            sites.append(("moe.shared_out", tokens, d, fs // ms))
+        if cfg.moe.first_dense_layers and cfg.d_ff:
+            # leading dense layers (DeepSeek-MoE) use the ordinary MLP sites
+            sites += mlp_sites()
     elif cfg.d_ff:
-        sites.append(("mlp.in", tokens, 3 * cfg.d_ff // ms, d))
-        if cfg.act != "gelu_plain":    # gated MLPs: gate shares mlp.in dims
-            sites.append(("mlp.gate", tokens, 3 * cfg.d_ff // ms, d))
-        sites.append(("mlp.out", tokens, d, cfg.d_ff // ms))
+        sites += mlp_sites()
     if cfg.ssm.enabled:
         d_in = cfg.ssm.expand * d
         sites = [("ssm.in_proj", tokens, (2 * d_in) // ms, d),
@@ -176,12 +191,19 @@ def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
     spars = sparsity_mode_for(cfg)
     act_d, wt_d = sparsity_densities_for(cfg)
     for site, m, n, k in matmul_sites(cfg, shape, model_shards):
+        # tied head = the (never-pruned, never-planned) embedding table: its
+        # FL bitmap is always all-live, so sparse dispatch would pay the
+        # trace-time metadata build on the vocab-sized weight every token
+        # for zero skipping — keep the site dense (mirrors the plan-layer
+        # tie_embeddings guard in core.sparsity)
+        mode = "dense" if (site == "lm_head" and cfg.tie_embeddings) \
+            else spars
         # FlexTree decision: partition the contraction if K is large and the
         # site's weight is K-sharded (attn.out / mlp.out style sites).
         k_sharded = site.endswith(".out") or site.endswith("out_proj")
         ic_p = model_shards if (k_sharded and model_shards > 1) else 1
         sched = select_matmul_schedule(
-            m, n, k, hw=hw, ic_p=ic_p, sparsity_mode=spars,
+            m, n, k, hw=hw, ic_p=ic_p, sparsity_mode=mode,
             act_density=(act_densities or {}).get(site, act_d),
             wt_density=(wt_densities or {}).get(site, wt_d))
         payload = m * n * 4.0     # f32 psums
@@ -190,13 +212,14 @@ def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
             site=site, m=m, n=n, k=k, schedule=sched,
             reduce=ReduceConfig(axis_name=contraction_axis, ic_p=ic_p,
                                 strategy=strat),
-            sparsity_mode=spars,
+            sparsity_mode=mode,
         )
     return ns
 
 
 def site_plan_estimate(d: SiteDescriptor, cfg: ArchConfig,
-                       in_bytes: int = 2) -> Dict[str, object]:
+                       in_bytes: int = 2,
+                       model_shards: int = 1) -> Dict[str, object]:
     """Modeled weight-plan stats for one site: what ``compile_weight_plan``
     would measure, estimated from the config's density prior.
 
@@ -211,10 +234,18 @@ def site_plan_estimate(d: SiteDescriptor, cfg: ArchConfig,
     tk = -(-d.k // bk)
     sparse = d.sparsity_mode in ("weight", "two_sided")
     est_nnz = max(1, min(tk, math.ceil(tk * wt_d))) if sparse else tk
-    dense_bytes = d.k * d.n * in_bytes
-    zvc_bytes = (dense_bytes * wt_d + d.k * d.n / 8.0 if sparse
+    # batched-expert sites carry E per-expert (K, N) matrices behind one
+    # descriptor — the plan economics scale by the *per-device* expert
+    # count: like matmul_sites, the estimate is per device-row; expert
+    # tensors are EP-sharded over the model axis (ceil for uneven splits —
+    # the worst-loaded device)
+    n_mats = 1
+    if d.site.startswith("moe.experts") and cfg.moe.enabled:
+        n_mats = -(-cfg.moe.n_experts // model_shards)
+    dense_bytes = d.k * d.n * in_bytes * n_mats
+    zvc_bytes = (dense_bytes * wt_d + n_mats * d.k * d.n / 8.0 if sparse
                  else float(dense_bytes))
-    return {
+    out = {
         "sparsity_mode": d.sparsity_mode,
         "wt_density": wt_d if sparse else 1.0,
         "tk": tk,
@@ -223,3 +254,8 @@ def site_plan_estimate(d: SiteDescriptor, cfg: ArchConfig,
         "zvc_bytes": zvc_bytes,
         "bytes_saved": max(dense_bytes - zvc_bytes, 0.0),
     }
+    if n_mats > 1:
+        out["experts"] = n_mats
+        out["per_expert_dense_bytes"] = d.k * d.n * in_bytes
+        out["per_expert_zvc_bytes"] = zvc_bytes / n_mats
+    return out

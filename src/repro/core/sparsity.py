@@ -271,6 +271,25 @@ def prune_magnitude(w: np.ndarray, sparsity: float,
     return pad.reshape(tm * bm, tk * bk)[:m, :k]
 
 
+def prune_stacked_magnitude(leaf, sparsity: float,
+                            block: Tuple[int, int] = (16, 16)):
+    """Block-magnitude-prune every (K, N) slice of a stacked weight leaf —
+    (L, K, N) matmul stacks or 4-D (L, E, K, N) expert tensors; leaves with
+    ndim < 3 (embeddings, norms, gate vectors) are returned untouched.
+
+    The shared leaf-geometry twin of ``_plannable_kn``: benches, examples
+    and tests use it (typically via ``jax.tree.map``) to give every leaf
+    the planner will later compile real zeros to skip.
+    """
+    if getattr(leaf, "ndim", 0) < 3:
+        return leaf
+    w = np.asarray(leaf)
+    flat = w.reshape((-1,) + w.shape[-2:])
+    out = np.stack([prune_magnitude(flat[i], sparsity, block=block)
+                    for i in range(flat.shape[0])])
+    return jnp.asarray(out.reshape(w.shape), leaf.dtype)
+
+
 def prune_k_blocks(w: np.ndarray, bk: int, bn: int,
                    max_live: int) -> np.ndarray:
     """Structured prune: keep the ``max_live`` highest-L2 (bk, bn) K-blocks
@@ -313,13 +332,20 @@ class PlannedWeight:
     ordinary jit inputs, so nothing weight-side is rebuilt inside the jitted
     step — and the geometry is static aux data.  Because it is a pytree node
     it rides *inside* the params tree: ``lax.scan`` over stacked layer
-    weights slices the metadata per layer exactly like the weight itself
-    (every leaf carries the layer axis in front).
-    ``kernels.ops.flex_matmul`` detects it and dispatches through the plan
-    path; raw ``x @ w`` call sites (decode fast paths that bypass
-    ``flex_matmul``) fall back to the dense weight via ``__rmatmul__``.
+    weights slices the metadata per layer exactly like the weight itself,
+    and ``jax.vmap`` over a remaining expert axis slices it per expert
+    (every leaf carries the same leading axes in front: (L, ...) for dense
+    families, (L, E, ...) for MoE expert tensors).
+    ``kernels.ops.flex_matmul`` / ``flex_expert_matmul`` / ``head_matmul``
+    detect it and dispatch through the plan path; raw ``x @ w`` call sites
+    (decode fast paths that bypass the dispatch) fall back to the dense
+    weight via ``__rmatmul__``.
+
+    ``transpose`` marks leaves stored in the (N, K) orientation — the
+    embedding-shaped ``lm_head`` (V, D) — whose metadata was compiled on the
+    transposed view; ``w_kn`` is the contraction-oriented dense weight.
     """
-    w: jax.Array          # (..., K, N) dense weight
+    w: jax.Array          # (..., K, N) dense weight ((..., N, K) if transpose)
     wkidx: jax.Array      # (..., tn, max_nnz) int32 — live K-blocks per
     #                       N-block column, ascending, zero-padded
     wkcnt: jax.Array      # (..., tn) int32 — live count per column
@@ -331,9 +357,15 @@ class PlannedWeight:
     bn: int = 128
     max_nnz: int = 1      # tight static bound: max live K-blocks (≤ tk)
     tk: int = 1           # dense K-block count (the trace-time upper bound)
+    transpose: bool = False   # w stored (..., N, K); metadata compiled on w.T
+
+    @property
+    def w_kn(self) -> jax.Array:
+        """Dense weight in the (..., K, N) contraction orientation."""
+        return jnp.swapaxes(self.w, -1, -2) if self.transpose else self.w
 
     def __rmatmul__(self, other):
-        return other @ self.w
+        return other @ self.w_kn
 
     @property
     def shape(self):
@@ -351,7 +383,8 @@ class PlannedWeight:
 jax.tree_util.register_dataclass(
     PlannedWeight,
     data_fields=("w", "wkidx", "wkcnt", "b_bitmap"),
-    meta_fields=("site", "mode", "bm", "bk", "bn", "max_nnz", "tk"))
+    meta_fields=("site", "mode", "bm", "bk", "bn", "max_nnz", "tk",
+                 "transpose"))
 
 
 def weight_side_lists(b_bitmap: np.ndarray,
@@ -424,17 +457,63 @@ def combine_with_activation_meta(a_bitmap: jax.Array, wkidx: jax.Array,
                            b_bitmap=b_bitmap, max_nnz=int(max_nnz))
 
 
+def _stacked_weight_lists(bmaps: np.ndarray, site_nnz: int, site: str,
+                          lead: Tuple[int, ...]
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-slice ``weight_side_lists`` over a (P, tk, tn) bitmap stack."""
+    p_stack, _, tn = bmaps.shape
+    wkidx = np.zeros((p_stack, tn, site_nnz), np.int32)
+    wkcnt = np.zeros((p_stack, tn), np.int32)
+    for i in range(p_stack):
+        coords = (",".join(map(str, np.unravel_index(i, lead)))
+                  if lead else "")
+        wkidx[i], wkcnt[i] = weight_side_lists(
+            bmaps[i], site_nnz, site=f"{site}[{coords}]" if coords else site)
+    return wkidx, wkcnt
+
+
+def _compile_stack_meta(flat: np.ndarray, bk: int, bn: int, site: str,
+                        lead: Tuple[int, ...],
+                        cap: Optional[int] = None):
+    """The one metadata builder behind both ``plan_weight`` and
+    ``compile_weight_plan``: per-slice block bitmaps over a (P, K, N)
+    stack, the tight site-wide ``max_nnz`` default (``cap`` overrides), and
+    the per-column live-K lists.  Returns
+    (bmaps (P, tk, tn), tk, tn, site_nnz, wkidx, wkcnt)."""
+    bmaps = np.stack([block_bitmap(flat[i], bk, bn)
+                      for i in range(flat.shape[0])])
+    tk, tn = bmaps.shape[1:]
+    site_nnz = cap if cap is not None else max(int(bmaps.sum(1).max()), 1)
+    wkidx, wkcnt = _stacked_weight_lists(bmaps, site_nnz, site, lead)
+    return bmaps, tk, tn, site_nnz, wkidx, wkcnt
+
+
 def plan_weight(w, *, site: str = "", mode: str = "weight",
                 bm: int = 128, bk: int = 128, bn: int = 128,
-                max_nnz: Optional[int] = None) -> PlannedWeight:
-    """Compile a single (K, N) weight into a :class:`PlannedWeight`."""
+                max_nnz: Optional[int] = None,
+                transpose: bool = False) -> PlannedWeight:
+    """Compile a single weight into a :class:`PlannedWeight`.
+
+    Accepts any number of leading stack axes — (K, N), batched-expert
+    (E, K, N), or stacked (L, E, K, N) — and, with ``transpose``, the
+    (..., N, K) orientation (metadata compiled on ``swapaxes(w, -1, -2)``,
+    matching ``PlannedWeight.w_kn`` at dispatch).  ``max_nnz`` defaults to
+    the tight bound over *all* slices, so the whole stack shares one static
+    kernel grid.
+    """
     w_np = np.asarray(w)
-    bbm = block_bitmap(w_np, bk, bn)
-    wkidx, wkcnt = weight_side_lists(bbm, max_nnz, site=site)
+    kn = np.swapaxes(w_np, -1, -2) if transpose else w_np
+    lead = kn.shape[:-2]
+    flat = kn.reshape((-1,) + kn.shape[-2:])
+    bmaps, tk, tn, site_nnz, wkidx, wkcnt = _compile_stack_meta(
+        flat, bk, bn, site, lead, cap=max_nnz)
     return PlannedWeight(
-        w=jnp.asarray(w), wkidx=jnp.asarray(wkidx), wkcnt=jnp.asarray(wkcnt),
-        b_bitmap=jnp.asarray(bbm), site=site, mode=mode, bm=bm, bk=bk, bn=bn,
-        max_nnz=int(wkidx.shape[-1]), tk=int(bbm.shape[0]))
+        w=jnp.asarray(w),
+        wkidx=jnp.asarray(wkidx.reshape(lead + (tn, site_nnz))),
+        wkcnt=jnp.asarray(wkcnt.reshape(lead + (tn,))),
+        b_bitmap=jnp.asarray(bmaps.reshape(lead + (tk, tn))),
+        site=site, mode=mode, bm=bm, bk=bk, bn=bn,
+        max_nnz=int(site_nnz), tk=int(tk), transpose=transpose)
 
 
 # keyed by (parent key, leaf key) context in the param pytree — the same
@@ -445,7 +524,23 @@ _PLAN_SITE_KEYS: Dict[str, Dict[str, str]] = {
     "xattn": {"wq": "attn.q", "wkv": "attn.kv", "wo": "attn.out"},
     "rglru": {"w_x": "rglru.in", "w_gate": "rglru.gate",
               "w_out": "rglru.out"},
+    "moe": {"router": "moe.router", "experts_in": "moe.experts_in",
+            "experts_gate": "moe.experts_gate",
+            "experts_out": "moe.experts_out"},
+    "shared": {"w_in": "moe.shared_in", "w_gate": "moe.shared_gate",
+               "w_out": "moe.shared_out"},
 }
+
+# top-level leaves (no parent key).  ``embed`` is deliberately absent: under
+# ``tie_embeddings`` the head *is* the embedding table, and planning it
+# would wrap the leaf ``embed()`` gathers from — the descriptor compiler
+# keeps the tied lm_head site dense for the same reason (an all-live FL
+# bitmap would make trace-time metadata pure overhead).
+_PLAN_TOP_SITE_KEYS: Dict[str, str] = {"lm_head": "lm_head"}
+
+# sites whose param leaf is stored (N, K) — metadata is compiled on the
+# transposed orientation so it matches the x @ wᵀ contraction
+_TRANSPOSED_SITES = frozenset({"lm_head"})
 
 
 def _path_keys(path) -> Tuple[str, ...]:
@@ -459,9 +554,29 @@ def _path_keys(path) -> Tuple[str, ...]:
 
 
 def _site_for_path(keys: Tuple[str, ...]) -> Optional[str]:
-    if len(keys) < 2:
-        return None
+    if len(keys) == 1:
+        return _PLAN_TOP_SITE_KEYS.get(keys[0])
     return _PLAN_SITE_KEYS.get(keys[-2], {}).get(keys[-1])
+
+
+def _plannable_kn(leaf, site: str) -> Optional[Tuple[np.ndarray,
+                                                     Tuple[int, ...]]]:
+    """Leaf → ((P, K, N) stack for planning, leading shape) or None.
+
+    Planned leaves are stacked 2-D contraction weights with any number of
+    leading axes: (L, K, N) dense/rec matmul families, 4-D (L, E, K, N) MoE
+    expert tensors, or the bare (N, K) ``lm_head`` leaf (transposed here so
+    the metadata matches the x @ headᵀ logits contraction).
+    """
+    ndim = getattr(leaf, "ndim", 0)
+    if site in _TRANSPOSED_SITES:
+        if ndim != 2:
+            return None
+        return np.asarray(leaf).T[None], ()
+    if ndim not in (3, 4):
+        return None
+    w = np.asarray(leaf)
+    return w.reshape((-1,) + w.shape[-2:]), w.shape[:-2]
 
 
 @dataclass
@@ -469,7 +584,11 @@ class SitePlan:
     """Precompiled weight-side sparsity metadata for one stacked weight leaf.
 
     Host-side (numpy) record; ``WeightSparsityPlan.attach`` materializes it
-    as :class:`PlannedWeight` nodes inside the params pytree."""
+    as :class:`PlannedWeight` nodes inside the params pytree.  ``lead`` is
+    the leaf's stack shape in front of the (K, N) matmul dims — (L,) for
+    scan-stacked 2-D sites, (L, E) for MoE expert tensors, () for the bare
+    ``lm_head`` leaf (``transpose``: stored (N, K), planned on the
+    transposed view)."""
     path: Tuple[str, ...]
     site: str
     mode: str
@@ -478,10 +597,12 @@ class SitePlan:
     bn: int
     tk: int
     tn: int
-    max_nnz: int              # tight: max live K-blocks over layers/columns
-    wkidx: np.ndarray         # (L, tn, max_nnz) int32
-    wkcnt: np.ndarray         # (L, tn) int32
-    b_bitmap: np.ndarray      # (L, tk, tn) bool
+    max_nnz: int              # tight: max live K-blocks over slices/columns
+    lead: Tuple[int, ...]     # leading stack shape ((L,), (L, E) or ())
+    transpose: bool
+    wkidx: np.ndarray         # lead + (tn, max_nnz) int32
+    wkcnt: np.ndarray         # lead + (tn,) int32
+    b_bitmap: np.ndarray      # lead + (tk, tn) bool
     zvc_values: np.ndarray    # packed non-zeros of the stacked weight
     zvc_bitmap: np.ndarray    # element bitmap (stacked weight shape)
     wt_density: float         # element-level non-zero fraction
@@ -494,9 +615,10 @@ class SitePlan:
         return max(self.dense_bytes - self.zvc_bytes, 0.0)
 
     def stats(self) -> Dict[str, object]:
-        return {
+        out = {
             "site": self.site, "mode": self.mode,
-            "layers": int(self.b_bitmap.shape[0]),
+            "lead": list(self.lead),
+            "layers": int(self.lead[0]) if self.lead else 1,
             "blocks": [self.bm, self.bk, self.bn],
             "max_nnz": self.max_nnz, "tk": self.tk,
             "wt_density": self.wt_density,
@@ -505,6 +627,17 @@ class SitePlan:
             "zvc_bytes": self.zvc_bytes,
             "bytes_saved": self.bytes_saved,
         }
+        if len(self.lead) > 1:        # expert leaf: per-expert economics
+            ebm = self.zvc_bitmap
+            out["experts"] = int(self.lead[1])
+            out["expert_wt_density"] = [
+                float(v) for v in
+                ebm.mean(axis=tuple(i for i in range(ebm.ndim) if i != 1))]
+            out["expert_max_nnz"] = [
+                int(v) for v in self.wkcnt.max(
+                    axis=tuple(i for i in range(self.wkcnt.ndim)
+                               if i != 1))]
+        return out
 
 
 @dataclass
@@ -536,10 +669,19 @@ class WeightSparsityPlan:
             if e is None:
                 return leaf
             if verify:
-                w = np.asarray(leaf)
-                live = np.stack([block_bitmap(w[l], e.bk, e.bn)
-                                 for l in range(w.shape[0])])
-                if not np.all(e.b_bitmap | ~live):
+                kn = _plannable_kn(leaf, e.site)
+                if kn is None:
+                    raise ValueError(
+                        f"{key} [{e.site}]: attached leaf (shape "
+                        f"{getattr(leaf, 'shape', None)}) is not a "
+                        f"plannable weight for this site — the plan was "
+                        f"compiled from a differently-shaped params tree; "
+                        f"rebuild with compile_weight_plan on these params")
+                flat, _ = kn
+                live = np.stack([block_bitmap(flat[i], e.bk, e.bn)
+                                 for i in range(flat.shape[0])])
+                planned = e.b_bitmap.reshape((-1,) + e.b_bitmap.shape[-2:])
+                if not np.all(planned | ~live):
                     raise ValueError(
                         f"{key} [{e.site}]: plan does not cover the attached "
                         f"weight's live blocks — it was compiled from "
@@ -549,7 +691,7 @@ class WeightSparsityPlan:
                 w=leaf, wkidx=jnp.asarray(e.wkidx),
                 wkcnt=jnp.asarray(e.wkcnt), b_bitmap=jnp.asarray(e.b_bitmap),
                 site=e.site, mode=e.mode, bm=e.bm, bk=e.bk, bn=e.bn,
-                max_nnz=e.max_nnz, tk=e.tk)
+                max_nnz=e.max_nnz, tk=e.tk, transpose=e.transpose)
         return jax.tree_util.tree_map_with_path(wrap, params)
 
     def wt_densities(self) -> Dict[str, float]:
@@ -592,7 +734,7 @@ def measure_weight_densities(params, schedules) -> Dict[str, float]:
         if schedules.sites[site].sparsity_mode not in ("weight",
                                                        "two_sided"):
             continue
-        if getattr(leaf, "ndim", 0) != 3:
+        if _plannable_kn(leaf, site) is None:
             continue
         w = np.asarray(leaf)
         nnz[site] = nnz.get(site, 0.0) + float(np.count_nonzero(w))
@@ -605,13 +747,18 @@ def compile_weight_plan(params, schedules, *,
                         ) -> WeightSparsityPlan:
     """Compile a :class:`WeightSparsityPlan` from the actual param tensors.
 
-    Walks the param pytree, matches stacked (L, K, N) weight leaves to their
-    descriptor-table sites (``schedules`` is a
-    ``core.descriptors.NetworkSchedule``), and precomputes per layer the
-    block bitmap, ZVC packing and per-column live-K lists at the site
-    schedule's block granularity.  ``max_nnz`` optionally caps a site's
-    bound; a cap below the tightest feasible value raises ``ValueError``
-    naming the site and (layer, column) coordinates.
+    Walks the param pytree, matches every plannable weight leaf to its
+    descriptor-table site (``schedules`` is a
+    ``core.descriptors.NetworkSchedule``): stacked (L, K, N) matmul leaves,
+    4-D (L, E, K, N) MoE expert tensors (per-(layer, expert) metadata, one
+    tight site-wide ``max_nnz``), and the bare (V, D) ``lm_head`` leaf
+    (planned on the transposed orientation; under ``tie_embeddings`` the
+    head is the ``embed`` leaf, which is deliberately never planned — see
+    ``_PLAN_TOP_SITE_KEYS``).  Per slice it precomputes the block bitmap,
+    ZVC packing and per-column live-K lists at the site schedule's block
+    granularity.  ``max_nnz`` optionally caps a site's bound; a cap below
+    the tightest feasible value raises ``ValueError`` naming the site and
+    (slice, column) coordinates.
     """
     plan = WeightSparsityPlan(arch=schedules.arch, shape=schedules.shape)
     for path, leaf in jax.tree_util.tree_leaves_with_path(params):
@@ -622,29 +769,27 @@ def compile_weight_plan(params, schedules, *,
         d = schedules.sites[site]
         if d.sparsity_mode not in ("weight", "two_sided"):
             continue
-        if getattr(leaf, "ndim", 0) != 3:
-            continue                       # only stacked 2-D matmul weights
-        w = np.asarray(leaf)
-        n_layers, k, n = w.shape
+        kn = _plannable_kn(leaf, site)
+        if kn is None:
+            continue
+        flat, lead = kn                    # (P, K, N) stack of matmul slices
+        _, k, n = flat.shape
         bm = max(min(d.schedule.bm, d.m), 1)
         bk = max(min(d.schedule.bk, k), 1)
         bn = max(min(d.schedule.bn, n), 1)
-        bmaps = np.stack([block_bitmap(w[l], bk, bn)
-                          for l in range(n_layers)])
-        tk, tn = bmaps.shape[1:]
-        cap = (max_nnz or {}).get(site)
-        site_nnz = cap if cap is not None else max(int(bmaps.sum(1).max()), 1)
-        wkidx = np.zeros((n_layers, tn, site_nnz), np.int32)
-        wkcnt = np.zeros((n_layers, tn), np.int32)
-        for l in range(n_layers):
-            wkidx[l], wkcnt[l] = weight_side_lists(
-                bmaps[l], site_nnz, site=f"{site}[layer {l}]")
+        bmaps, tk, tn, site_nnz, wkidx, wkcnt = _compile_stack_meta(
+            flat, bk, bn, site, lead, cap=(max_nnz or {}).get(site))
+        w = np.asarray(leaf)
         vals, ebm = zvc_encode_np(w)
         elem_bytes = w.dtype.itemsize
         plan.entries["/".join(keys)] = SitePlan(
             path=keys, site=site, mode=d.sparsity_mode,
             bm=bm, bk=bk, bn=bn, tk=tk, tn=tn, max_nnz=site_nnz,
-            wkidx=wkidx, wkcnt=wkcnt, b_bitmap=bmaps,
+            lead=tuple(int(v) for v in lead),
+            transpose=site in _TRANSPOSED_SITES,
+            wkidx=wkidx.reshape(lead + (tn, site_nnz)),
+            wkcnt=wkcnt.reshape(lead + (tn,)),
+            b_bitmap=bmaps.reshape(lead + (tk, tn)),
             zvc_values=vals, zvc_bitmap=ebm,
             wt_density=float(vals.size) / max(w.size, 1),
             block_density=float(bmaps.mean()),

@@ -19,8 +19,12 @@ block-CSB skip rate.
 
 Three entry points honor the same contract (see ``core.descriptors``):
 ``kernels.ops.block_sparse_matmul`` passes *precomputed* host-built metadata
-(``build_block_sparse_meta``); the descriptor-driven ``ops.flex_matmul``
-dispatch builds metadata *at trace time* (``build_block_sparse_meta_jnp``)
+(``build_block_sparse_meta``); the descriptor-driven dispatch
+(``ops.flex_matmul`` for 2-D leaves, ``ops.flex_expert_matmul`` for the
+batched-expert einsums — vmapped per expert on the XLA path, unrolled over
+the static E axis here since the scalar-prefetch grid has no batching
+rule — and ``ops.head_matmul`` for the transposed lm_head contraction)
+builds metadata *at trace time* (``build_block_sparse_meta_jnp``)
 with ``max_nnz = tk``; and the weight-plan path (``core.sparsity
 .PlannedWeight`` attached at engine bring-up) supplies the weight-side
 lists as jit inputs and runs the plan's *tight* static ``max_nnz`` ≤ tk —

@@ -1,6 +1,10 @@
 """Jit'd dispatch wrappers for the Pallas kernels (DESIGN.md D3).
 
-Every matmul site in the model zoo calls ``flex_matmul``; a process-wide
+Every matmul site in the model zoo routes through one of three entry points
+— ``flex_matmul`` (2-D / stacked leaves), ``flex_expert_matmul`` (the MoE
+batched-expert einsums, (E, C, K) × (E, K, N)) and ``head_matmul`` (the
+einsum-based lm_head/logits contraction) — so plan coverage is *total*: no
+matmul in the decode path bypasses the site dispatch.  A process-wide
 execution config decides whether the Pallas TPU kernels run (TPU target /
 interpret mode) or the semantically identical XLA ops (CPU tests and the
 compile-only dry-run — Pallas TPU kernels do not lower for the CPU backend).
@@ -64,6 +68,14 @@ class ExecConfig:
     sparse_dispatch: bool = True      # honor SiteDescriptor.sparsity_mode
     plan: Optional[object] = None     # WeightSparsityPlan (engine bring-up)
     collect_stats: bool = False       # emit activation popcounts per site
+    # the per-site activation densities the schedule was *selected under*
+    # (None = the 0.5 prior) — the drift baseline for
+    # ``serve.engine.ServeEngine.maybe_recalibrate`` — plus the ArchConfig
+    # and sharding the descriptor table was compiled from, so the engine
+    # can recompile the schedule without re-deriving them
+    act_densities: Optional[Dict[str, float]] = None
+    arch_cfg: Optional[object] = None
+    model_shards: int = 1
 
 
 def _cfg() -> ExecConfig:
@@ -113,6 +125,14 @@ class SparsityStatsCollector:
     def __init__(self):
         self._live: Dict[str, int] = {}
         self._total: Dict[str, int] = {}
+
+    def reset(self) -> None:
+        """Clear the window *in place*.  The jitted step's debug callback
+        closed over this object at trace time, so the collector must never
+        be replaced while a compiled step is live — resetting keeps the
+        traced callback and the reader looking at the same instance."""
+        self._live.clear()
+        self._total.clear()
 
     def record(self, site: str, live, total):
         self._live[site] = self._live.get(site, 0) + int(live)
@@ -189,7 +209,6 @@ def _sparse_site_matmul(x2: jax.Array, w: jax.Array, mode: str, sched,
     b_bitmap = sparsity_lib.block_bitmap_jnp(wp, bk, bn)
     if mode == "two_sided":
         a_bitmap = sparsity_lib.block_bitmap_jnp(xp, bm, bk)
-        _record_act_stats(site, x2)
     else:                             # weight-sided: IF bitmap all ones
         a_bitmap = jnp.ones((tm, tk), bool)
     meta = sparsity_lib.build_block_sparse_meta_jnp(a_bitmap, b_bitmap,
@@ -206,10 +225,11 @@ def _planned_matmul(x2: jax.Array, pw: PlannedWeight,
     from repro.core import sparsity as sparsity_lib
     from repro.kernels.flex_matmul import pad_to_blocks
 
+    w = pw.w_kn                       # (K, N) contraction orientation
     m, k = x2.shape
-    n = pw.w.shape[-1]
+    n = w.shape[-1]
     xp = pad_to_blocks(x2, pw.bm, pw.bk)
-    wp = pad_to_blocks(pw.w, pw.bk, pw.bn)
+    wp = pad_to_blocks(w, pw.bk, pw.bn)
     tm, tk = xp.shape[0] // pw.bm, xp.shape[1] // pw.bk
     if tk != pw.tk:
         raise ValueError(
@@ -219,7 +239,6 @@ def _planned_matmul(x2: jax.Array, pw: PlannedWeight,
         a_bitmap = sparsity_lib.block_bitmap_jnp(xp, pw.bm, pw.bk)
         meta = sparsity_lib.combine_with_activation_meta(
             a_bitmap, pw.wkidx, pw.wkcnt, pw.b_bitmap)
-        _record_act_stats(pw.site, x2)
     else:
         meta = sparsity_lib.weight_plan_meta(pw.wkidx, pw.wkcnt,
                                              pw.b_bitmap, tm)
@@ -246,15 +265,19 @@ def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
     if isinstance(w, PlannedWeight):
         if cfg.sparse_dispatch and w.w.ndim == 2 and x.ndim >= 2:
             x2, lead = _leading_flat(x)
+            if w.mode == "two_sided":
+                _record_act_stats(w.site or site, x2)
             out = _planned_matmul(x2, w, cfg)
-            return out.reshape(*lead, w.w.shape[-1]).astype(x.dtype)
-        w = w.w                        # plan disabled → dense fallback
+            return out.reshape(*lead, out.shape[-1]).astype(x.dtype)
+        w = w.w_kn                     # plan disabled → dense fallback
     desc = _site_descriptor(site, cfg) if cfg.sparse_dispatch else None
     sparse = (desc is not None and w.ndim == 2
               and desc.sparsity_mode in ("weight", "two_sided"))
     if (sparse or cfg.use_pallas) and x.ndim >= 2:
         x2, lead = _leading_flat(x)
         if sparse:
+            if desc.sparsity_mode == "two_sided":
+                _record_act_stats(site, x2)
             out = _sparse_site_matmul(x2, w, desc.sparsity_mode,
                                       desc.schedule, cfg, site)
         else:
@@ -266,6 +289,94 @@ def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
         x, w, (((x.ndim - 1,), (0,)), ((), ())),
         precision=precision, preferred_element_type=jnp.float32,
     ).astype(x.dtype)
+
+
+def head_matmul(x: jax.Array, head, *, site: str = "lm_head",
+                precision=None) -> jax.Array:
+    """x (..., D) @ head (V, D)ᵀ → (..., V) — the einsum-based logits path
+    routed through the same per-site dispatch as every other matmul.
+
+    ``head`` is either the raw embedding-shaped (V, D) matrix (tied or
+    unplanned configs — the transpose happens at trace time and fuses into
+    the dot) or a ``PlannedWeight`` compiled in the transposed (D, V)
+    orientation by ``core.sparsity.compile_weight_plan``.
+    """
+    if isinstance(head, PlannedWeight):
+        return flex_matmul(x, head, site=site, precision=precision)
+    return flex_matmul(x, jnp.swapaxes(head, -1, -2), site=site,
+                       precision=precision)
+
+
+def _map_experts(fn, x: jax.Array, w, cfg: ExecConfig) -> jax.Array:
+    """Apply a per-expert (C, K) × (K, N) function over the leading E axis.
+
+    XLA path: ``jax.vmap`` (the metadata builders and the masked oracle are
+    all pure jnp).  Pallas path: the scalar-prefetch ``pallas_call`` has no
+    batching rule, so the static expert axis is unrolled — one kernel
+    launch per expert.  ``w`` may be a raw (E, K, N) array or a
+    ``PlannedWeight`` whose leaves carry the leading E axis (``tree_map``
+    slices both the same way).
+    """
+    if cfg.use_pallas:
+        slices = [fn(x[e], jax.tree_util.tree_map(lambda a: a[e], w))
+                  for e in range(x.shape[0])]
+        return jnp.stack(slices)
+    return jax.vmap(fn)(x, w)
+
+
+def flex_expert_matmul(x: jax.Array, w, *, site: str = "") -> jax.Array:
+    """Batched-expert contraction x (E, C, K) @ w (E, K, N) → (E, C, N).
+
+    The MoE expert-FFN einsums routed through the same per-site planned
+    dispatch as the 2-D sites (the ``moe.experts_*`` descriptor entries):
+    per-expert precompiled metadata when ``w`` is a ``PlannedWeight`` with
+    a leading E axis (the plan's tight site-wide ``max_nnz`` shrinks every
+    expert's kernel grid), trace-time per-expert bitmaps otherwise.  Dense
+    sites run the schedule-flexible Pallas matmul per expert when Pallas is
+    on; on the XLA path they fall back to the batched einsum, bit-identical
+    to the pre-dispatch path.
+
+    NOTE on popcounts: ``x`` is the capacity-padded dispatch buffer, so the
+    recorded two-sided activation density folds routing occupancy (invalid
+    capacity slots are zero rows) into activation sparsity.  That is the
+    density the expert matmul *actually executes under* — those rows really
+    are skipped — but it moves with load; like the engine's idle-slot
+    caveat, calibrate (and set ``maybe_recalibrate`` thresholds) from a
+    representative traffic mix.
+    """
+    cfg = _cfg()
+    if isinstance(w, PlannedWeight):
+        if (cfg.sparse_dispatch and w.w.ndim == 3 and x.ndim == 3
+                and x.shape[0] == w.w.shape[0]):
+            if w.mode == "two_sided":
+                _record_act_stats(w.site or site, x)
+            out = _map_experts(lambda xe, pwe: _planned_matmul(xe, pwe, cfg),
+                               x, w, cfg)
+            return out.astype(x.dtype)
+        w = w.w_kn                     # plan disabled → dense fallback
+    desc = _site_descriptor(site, cfg) if cfg.sparse_dispatch else None
+    sparse = (desc is not None and w.ndim == 3 and x.ndim == 3
+              and x.shape[0] == w.shape[0]
+              and desc.sparsity_mode in ("weight", "two_sided"))
+    if sparse:
+        if desc.sparsity_mode == "two_sided":
+            _record_act_stats(site, x)
+        out = _map_experts(
+            lambda xe, we: _sparse_site_matmul(xe, we, desc.sparsity_mode,
+                                               desc.schedule, cfg, site),
+            x, w, cfg)
+        return out.astype(x.dtype)
+    if (cfg.use_pallas and w.ndim == 3 and x.ndim == 3
+            and x.shape[0] == w.shape[0]):
+        # dense site on the Pallas path: the schedule-flexible kernel per
+        # expert (same dataflow dispatch as the 2-D dense sites)
+        from repro.kernels import flex_matmul as fm
+        sched = site_schedule(site)
+        slices = [fm.flex_matmul(x[e], w[e], schedule=sched,
+                                 interpret=cfg.interpret)
+                  for e in range(x.shape[0])]
+        return jnp.stack(slices).astype(x.dtype)
+    return jnp.einsum("eck,ekn->ecn", x, w)
 
 
 def block_sparse_matmul(x: jax.Array, w: jax.Array, meta, *,

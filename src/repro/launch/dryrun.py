@@ -71,14 +71,18 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
 
     # per-site descriptor table (§III-A registers): the chosen dataflow +
     # sparsity mode per matmul site, observable alongside the XLA analysis.
+    # Coverage is total (ISSUE 4): MoE batched-expert einsum sites
+    # (moe.experts_*, with per-expert plan economics under "experts" /
+    # "per_expert_*"), shared-expert and router sites, and the lm_head
+    # logits contraction all carry entries like the 2-D matmul leaves.
     # "plan" records the weight-sparsity-plan economics per site (density,
     # tight max_nnz vs tk, ZVC bytes saved) — modeled from the config prior,
     # since the dry-run lowers against ShapeDtypeStructs (no real params);
     # engines with params measure the same stats via WeightSparsityPlan.
     arch_cfg = get_config(arch_id)
+    n_model_shards = int(dict(mesh.shape).get("model", 1))
     ns = compile_network_schedule(arch_cfg, SHAPES[shape_name],
-                                  model_shards=int(dict(mesh.shape)
-                                                   .get("model", 1)))
+                                  model_shards=n_model_shards)
     sites = {
         name: {
             "m": d.m, "n": d.n, "k": d.k,
@@ -88,7 +92,8 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
             "sparsity_mode": d.sparsity_mode,
             "hbm_bytes": d.schedule.hbm_bytes,
             "flops": d.schedule.flops,
-            "plan": site_plan_estimate(d, arch_cfg),
+            "plan": site_plan_estimate(d, arch_cfg,
+                                       model_shards=n_model_shards),
         } for name, d in ns.sites.items()}
     # XLA:CPU float-normalization inflation (absent on the TPU target):
     # hoisted f32 copies of bf16 scan-carried weights/caches.  Subtract a

@@ -91,8 +91,15 @@ def embed(cfg: ArchConfig, emb: jax.Array, tokens: jax.Array) -> jax.Array:
 
 
 def logits_head(cfg: ArchConfig, head: jax.Array, x: jax.Array) -> jax.Array:
-    """Full logits — decode-time only (single position)."""
-    logits = jnp.einsum("bsd,vd->bsv", x, head).astype(jnp.float32)
+    """Full logits — decode-time only (single position).
+
+    The head contraction routes through ``ops.head_matmul`` so ``lm_head``
+    is a planned dispatch site like every other matmul: it consults the
+    descriptor table and accepts ``PlannedWeight`` metadata (untied configs
+    under a compiled plan; tied heads stay raw — see
+    ``core.sparsity.compile_weight_plan``).
+    """
+    logits = ops.head_matmul(x, head, site="lm_head").astype(jnp.float32)
     if cfg.logit_softcap:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
     return shard(logits, "batch", None, "vocab")

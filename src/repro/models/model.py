@@ -51,6 +51,13 @@ def init_params(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
 
 
 def head_matrix(p: Params, cfg: ArchConfig) -> jax.Array:
+    """The (V, D) logits matrix — ``embed`` when tied, else ``lm_head``.
+
+    Under an attached ``WeightSparsityPlan`` the untied ``lm_head`` leaf is
+    a ``PlannedWeight`` (consumed by ``ops.head_matmul``); the tied head is
+    always the raw ``embed`` leaf — the plan never wraps it, because
+    ``embed()`` gathers rows from the same tensor.
+    """
     return p["embed"] if cfg.tie_embeddings else p["lm_head"]
 
 

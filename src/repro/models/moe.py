@@ -32,9 +32,17 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.sparsity import PlannedWeight
+from repro.kernels import ops
 from repro.sharding.partition import current_rules, shard
 
 Params = Dict[str, jax.Array]
+
+
+def _dense_w(w):
+    """Unwrap a PlannedWeight to its dense contraction-oriented array (for
+    paths that manage their own sharding/collectives, e.g. shard_map)."""
+    return w.w_kn if isinstance(w, PlannedWeight) else w
 
 
 def init_moe(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
@@ -69,8 +77,14 @@ def init_moe(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:
 
 def _route(router: jax.Array, xt: jax.Array, k: int
            ) -> Tuple[jax.Array, jax.Array]:
-    """xt (T, D) -> (gates (T, k) f32 renormalized, idx (T, k) i32)."""
-    logits = xt.astype(jnp.float32) @ router
+    """xt (T, D) -> (gates (T, k) f32 renormalized, idx (T, k) i32).
+
+    The router matmul is a planned dispatch site (``moe.router``) like any
+    other — under a sparse descriptor it runs the block-sparse path, which
+    skips only true-zero blocks and stays numerically identical to dense.
+    """
+    logits = ops.flex_matmul(xt.astype(jnp.float32), router,
+                             site="moe.router")
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, k)
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
@@ -96,10 +110,28 @@ def _dispatch_indices(fid: jax.Array, n_bins: int, capacity: int
 
 
 def _expert_ffn(xe: jax.Array, p: Params) -> jax.Array:
-    """Batched expert MLP: (E, C, D) -> (E, C, D)."""
-    h = jnp.einsum("ecd,edf->ecf", xe, p["experts_in"])
-    g = jnp.einsum("ecd,edf->ecf", xe, p["experts_gate"])
-    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["experts_out"])
+    """Batched expert MLP: (E, C, D) -> (E, C, D).
+
+    Every expert einsum routes through ``ops.flex_expert_matmul`` — the
+    ``moe.experts_*`` descriptor sites — so the expert contractions accept
+    per-expert ``PlannedWeight`` metadata and block-sparse dispatch exactly
+    like the 2-D matmul leaves.  Dense sites fall back to the batched
+    einsum, bit-identical to the pre-dispatch path.
+    """
+    h = ops.flex_expert_matmul(xe, p["experts_in"], site="moe.experts_in")
+    g = ops.flex_expert_matmul(xe, p["experts_gate"],
+                               site="moe.experts_gate")
+    return ops.flex_expert_matmul(jax.nn.silu(g) * h, p["experts_out"],
+                                  site="moe.experts_out")
+
+
+def _expert_ffn_dense(xe: jax.Array, p: Params) -> jax.Array:
+    """Plain-einsum expert MLP — the gshard oracle's reference path, kept
+    independent of the dispatch machinery under test."""
+    h = jnp.einsum("ecd,edf->ecf", xe, _dense_w(p["experts_in"]))
+    g = jnp.einsum("ecd,edf->ecf", xe, _dense_w(p["experts_gate"]))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h,
+                      _dense_w(p["experts_out"]))
 
 
 def _scatter_rows(n_rows: int, idx: jax.Array, valid: jax.Array,
@@ -204,8 +236,10 @@ def _apply_moe_ep(p: Params, cfg: ArchConfig, x: jax.Array, rules
         out_specs=P(batch_axes, ep_axis, None),
         check_rep=False,
     )
-    return smapped(x, p["router"], p["experts_in"], p["experts_gate"],
-                   p["experts_out"])
+    # shard_map specs address raw arrays: planned weights are unwrapped here
+    # and the sparse dispatch (if any) re-derives metadata inside the body
+    return smapped(x, _dense_w(p["router"]), _dense_w(p["experts_in"]),
+                   _dense_w(p["experts_gate"]), _dense_w(p["experts_out"]))
 
 
 def _ep_applicable(cfg: ArchConfig, x: jax.Array, rules) -> bool:
@@ -242,11 +276,15 @@ def apply_moe(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
 
     y = shard(y, "batch", "seq", "embed")       # pin the residual stream (SP-aware)
     if "shared" in p:
+        # shared experts are ordinary dispatch sites (moe.shared_*)
         sp = p["shared"]
         xt = x.reshape(b * s, d)
-        hs = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_in"])
+        hs = (jax.nn.silu(ops.flex_matmul(xt, sp["w_gate"],
+                                          site="moe.shared_gate"))
+              * ops.flex_matmul(xt, sp["w_in"], site="moe.shared_in"))
         hs = shard(hs, "batch", "ffn")
-        ys = shard((hs @ sp["w_out"]).reshape(b, s, d), "batch", None,
+        ys = shard(ops.flex_matmul(hs, sp["w_out"], site="moe.shared_out"
+                                   ).reshape(b, s, d), "batch", None,
                    "embed")
         y = y + ys
     return y
@@ -283,24 +321,30 @@ def _top_k_gating(logits: jax.Array, k: int, capacity: int
 
 
 def apply_moe_gshard(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
-    """O(T·E·C) einsum dispatch — oracle for the sort-based paths."""
+    """O(T·E·C) einsum dispatch — oracle for the sort-based paths.
+
+    Deliberately bypasses the site dispatch everywhere (raw einsums /
+    matmuls, dense weights) so it stays a semantic reference the sparse
+    paths are tested *against*.
+    """
     b, s, d = x.shape
     m = cfg.moe
     t = b * s
     xt = x.reshape(t, d)
     capacity = _capacity(t, m.top_k, m.n_experts, m.capacity_factor)
 
-    logits = (xt.astype(jnp.float32) @ p["router"])         # (T, E)
+    logits = (xt.astype(jnp.float32) @ _dense_w(p["router"]))    # (T, E)
     dispatch, combine = _top_k_gating(logits, m.top_k, capacity)
 
     xe = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), xt)
-    ye = _expert_ffn(xe, p)
+    ye = _expert_ffn_dense(xe, p)
     y = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), ye)
 
     if "shared" in p:
         sp = p["shared"]
-        hs = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_in"])
-        y = y + hs @ sp["w_out"]
+        hs = (jax.nn.silu(xt @ _dense_w(sp["w_gate"]))
+              * (xt @ _dense_w(sp["w_in"])))
+        y = y + hs @ _dense_w(sp["w_out"])
     return y.reshape(b, s, d)
 
 

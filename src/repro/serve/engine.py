@@ -22,11 +22,15 @@ the *measured* per-site weight densities, and ``ServeEngine`` attaches the
 plan into the params pytree so the jitted decode step receives it as
 ordinary arrays (no weight-side bitmap/argsort work per token).  Runtime
 activation-bitmap popcounts are accumulated per site
-(``activation_densities``) to calibrate the scheduler's activation prior.
+(``activation_densities``) to calibrate the scheduler's activation prior,
+and ``maybe_recalibrate`` closes the loop: when the measured densities
+drift past a threshold from the ones the schedule was selected under, the
+engine recompiles the descriptor table + plan in place.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -46,6 +50,7 @@ def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
                        params=None,
                        collect_stats: bool = False,
                        act_densities: Optional[Dict[str, float]] = None,
+                       wt_densities: Optional[Dict[str, float]] = None,
                        ) -> ops.ExecConfig:
     """ExecConfig carrying the decode-shape descriptor table for ``cfg``.
 
@@ -61,6 +66,10 @@ def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
     measured runtime activation densities
     (``ServeEngine.activation_densities``) back into the selector;
     ``collect_stats`` makes the engine accumulate those popcounts.
+    ``wt_densities`` seeds the selector with already-measured weight
+    densities (e.g. an existing plan's ``wt_densities()``) when ``params``
+    is not re-walked — a recalibration that knows the weights didn't
+    change.
     """
     from repro.core.descriptors import (compile_network_schedule,
                                         sparsity_mode_for)
@@ -69,7 +78,8 @@ def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
     shape = ShapeConfig(name="serve_decode", kind="decode", seq_len=1,
                         global_batch=n_slots)
     ns = compile_network_schedule(cfg, shape, model_shards=model_shards,
-                                  act_densities=act_densities)
+                                  act_densities=act_densities,
+                                  wt_densities=wt_densities)
     plan = None
     if params is not None and sparsity_mode_for(cfg) != "dense":
         measured = measure_weight_densities(params, ns)
@@ -80,7 +90,27 @@ def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
             plan = compile_weight_plan(params, ns)
     return ops.ExecConfig(use_pallas=use_pallas, interpret=interpret,
                           schedules=ns, plan=plan,
-                          collect_stats=collect_stats)
+                          collect_stats=collect_stats,
+                          act_densities=(dict(act_densities)
+                                         if act_densities else None),
+                          arch_cfg=cfg, model_shards=model_shards)
+
+
+def activation_density_drift(baseline: Optional[Dict[str, float]],
+                             measured: Dict[str, float], *,
+                             prior: float = 0.5) -> float:
+    """Max |measured − selected-under| activation density over sites.
+
+    ``baseline`` holds the densities the current schedule was selected
+    under (``ExecConfig.act_densities``); sites absent from it were
+    selected under the scheduler's 0.5 activation ``prior``.  The pure
+    trigger-side of the auto-recalibration policy — unit-testable without
+    a recompile.
+    """
+    drift = 0.0
+    for site, m in (measured or {}).items():
+        drift = max(drift, abs(m - (baseline or {}).get(site, prior)))
+    return drift
 
 
 @dataclass
@@ -134,6 +164,7 @@ class ServeEngine:
                     scopes.enter_context(ops.sparsity_stats(self._stats))
                 return model_lib.decode_step(p, cfg, t, s, pos)
 
+        self._decode_fn = _decode_fn
         self._decode = jax.jit(_decode_fn)
 
     def activation_densities(self) -> Dict[str, float]:
@@ -149,6 +180,98 @@ class ServeEngine:
             return {}
         jax.effects_barrier()        # flush in-flight debug callbacks
         return self._stats.densities()
+
+    def maybe_recalibrate(self, drift_threshold: float = 0.15, *,
+                          recompile: bool = True
+                          ) -> Optional[Dict[str, float]]:
+        """Auto-recalibration policy (ROADMAP open item).
+
+        When the measured per-site activation densities drift more than
+        ``drift_threshold`` from the densities the current schedule was
+        *selected under* (``ExecConfig.act_densities``; absent sites were
+        selected under the 0.5 prior), recompile the descriptor table via
+        ``decode_exec_config(act_densities=measured)`` and swap it into the
+        engine — the jitted step re-traces under the new table on the next
+        call, decode state and in-flight requests carry over untouched.
+        The weights didn't change, so the existing ``WeightSparsityPlan``
+        (and the attached params) are *reused* whenever every planned
+        site's block granularity survived the re-selection; only a site
+        whose (bm, bn, bk) actually moved forces a full plan rebuild.
+
+        Every probe with measurements consumes the popcount window, so
+        drift is judged on traffic since the previous probe — a late shift
+        is detected within one probe interval, not diluted by the lifetime
+        average.
+
+        Returns the measured densities when the drift tripped the
+        threshold, else ``None``.  ``recompile=False`` answers only the
+        trigger question (no schedule/plan rebuild) — the unit-testable
+        half of the policy.
+        """
+        if self.exec_cfg is None or self._stats is None:
+            return None
+        measured = self.activation_densities()
+        if not measured:
+            return None
+        # the ArchConfig the table was compiled from carries the sparsity
+        # flags — the engine's own cfg may be the dense twin, and
+        # recompiling from it would silently drop sparse dispatch.  Checked
+        # *before* the window is consumed so the evidence survives the
+        # error.
+        if recompile and self.exec_cfg.arch_cfg is None:
+            raise ValueError(
+                "maybe_recalibrate(recompile=True) needs an ExecConfig "
+                "built by decode_exec_config (arch_cfg is unset on this "
+                "hand-built config) — pass recompile=False to only "
+                "probe the trigger, or rebuild the config via "
+                "decode_exec_config")
+        # consume the window *in place* — the compiled step's callback
+        # closed over this collector at trace time, so it must not be
+        # swapped for a new object while that executable is live
+        self._stats.reset()
+        drift = activation_density_drift(self.exec_cfg.act_densities,
+                                         measured)
+        if drift <= drift_threshold:
+            return None
+        if recompile:
+            old = self.exec_cfg
+            new_ec = decode_exec_config(
+                old.arch_cfg, self.n_slots,
+                model_shards=old.model_shards,
+                use_pallas=old.use_pallas, interpret=old.interpret,
+                collect_stats=old.collect_stats,
+                act_densities=measured,
+                wt_densities=(self.plan.wt_densities()
+                              if self.plan is not None and self.plan.entries
+                              else None))
+            plan_sites = ({e.site for e in self.plan.entries.values()}
+                          if self.plan is not None else set())
+            same_blocks = all(
+                s in new_ec.schedules.sites and s in old.schedules.sites
+                and (new_ec.schedules.sites[s].schedule.bm,
+                     new_ec.schedules.sites[s].schedule.bn,
+                     new_ec.schedules.sites[s].schedule.bk)
+                == (old.schedules.sites[s].schedule.bm,
+                    old.schedules.sites[s].schedule.bn,
+                    old.schedules.sites[s].schedule.bk)
+                for s in plan_sites)
+            if self.plan is None or same_blocks:
+                # same granularity everywhere → old plan + attached params
+                # stay valid; skip the host-side plan rebuild entirely
+                self.exec_cfg = dataclasses.replace(new_ec, plan=self.plan)
+            else:
+                self.exec_cfg = decode_exec_config(
+                    old.arch_cfg, self.n_slots,
+                    model_shards=old.model_shards,
+                    use_pallas=old.use_pallas, interpret=old.interpret,
+                    params=self.params, collect_stats=old.collect_stats,
+                    act_densities=measured)
+                self.plan = self.exec_cfg.plan
+                self._exec_params = (
+                    self.plan.attach(self.params, verify=False)
+                    if self.plan is not None else self.params)
+            self._decode = jax.jit(self._decode_fn)
+        return measured
 
     # ---- request management ----
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:

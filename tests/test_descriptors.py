@@ -53,12 +53,21 @@ def test_ic_p_only_on_k_sharded_sites():
      "two_sided"),
 ])
 def test_sparsity_mode_propagates_from_arch_config(sp, expect):
+    # gemma-2b ties embeddings: its lm_head is the (never-pruned) embedding
+    # table, so that one site stays dense under any sparsity config — the
+    # descriptor-level twin of the plan layer's tie_embeddings guard
     cfg = dataclasses.replace(get_config("gemma-2b"), sparsity=sp)
     assert sparsity_mode_for(cfg) == expect
     ns = compile_network_schedule(cfg, SHAPES["decode_32k"])
     for d in ns.sites.values():
-        assert d.sparsity_mode == expect, d.site
-        assert d.schedule.sparsity_mode == expect, d.site
+        want = "dense" if d.site == "lm_head" else expect
+        assert d.sparsity_mode == want, d.site
+        assert d.schedule.sparsity_mode == want, d.site
+    # untied configs propagate the mode to the head site too
+    ns_untied = compile_network_schedule(
+        dataclasses.replace(get_config("yi-9b"), sparsity=sp),
+        SHAPES["decode_32k"])
+    assert ns_untied.sites["lm_head"].sparsity_mode == expect
 
 
 def test_gate_sites_in_descriptor_table():

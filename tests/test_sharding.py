@@ -23,7 +23,11 @@ def test_matmul_sites_cover_families():
 
     moe_sites = dict((s[0], s[1:]) for s in
                      matmul_sites(get_config("deepseek-moe-16b"), train))
-    assert {"moe.router", "moe.expert_in", "moe.expert_out"} <= set(moe_sites)
+    assert {"moe.router", "moe.experts_in", "moe.experts_gate",
+            "moe.experts_out", "moe.shared_in", "moe.shared_gate",
+            "moe.shared_out", "lm_head"} <= set(moe_sites)
+    # the leading dense layers use the ordinary MLP sites
+    assert {"mlp.in", "mlp.gate", "mlp.out"} <= set(moe_sites)
 
     ssm_sites = dict((s[0], s[1:]) for s in
                      matmul_sites(get_config("mamba2-1.3b"), train))
