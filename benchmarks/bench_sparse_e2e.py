@@ -13,6 +13,11 @@ For each sparsity profile this measures, on CPU:
     dense vs ``two_sided`` vs plan-backed exec config on a smoke LM, plus a
     smoke *MoE* engine (batched-expert einsums + per-expert plans through
     the same dispatch; ``engine_moe`` in the report),
+  * **serve throughput** — the fused hot loop (``decode_many`` blocks +
+    batched prefill + donated state) vs the per-token oracle loop on
+    drain-a-queue engine profiles: tokens/sec, speedup, and the
+    host-overhead fraction (wall − device time) per path.  The fused and
+    per-token token streams are asserted identical,
   * **modeled energy + cycles** — the paper's own evaluation framework
     (``core.energy_model``) on the equivalent layer, per sparsity variant,
   * **modeled HBM traffic / roofline time** — the TPU-native schedule
@@ -36,7 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SparsityConfig, get_smoke_config
+from repro.configs.base import ArchConfig, SparsityConfig, get_smoke_config
 from repro.core.descriptors import NetworkSchedule, SiteDescriptor
 from repro.core.energy_model import (ConvLayer, FLEXNN, SparsityStats,
                                      evaluate, flexnn_variant)
@@ -188,10 +193,14 @@ def bench_engine(profile: dict, arch="stablelm-1.6b", n_steps=12
         for p in ([3, 5, 7], [2, 4, 6]):
             eng.submit(np.asarray(p, np.int32), max_new=n_steps)
         eng.step()                                     # admit + warm the jit
+        # the donated prefill/step work is dispatched async — settle it
+        # before the first timestamp so the measured steps are honest
+        jax.block_until_ready(eng.state)
         t0 = time.perf_counter()
         done = 1
         while done < n_steps and eng.step():
             done += 1
+        jax.block_until_ready(eng.state)
         out["step_time_s"][mode] = (time.perf_counter() - t0) / max(done - 1,
                                                                     1)
         tokens[mode] = [s.req.out for s in eng.slots if s.req is not None]
@@ -213,12 +222,183 @@ def bench_engine(profile: dict, arch="stablelm-1.6b", n_steps=12
     return out
 
 
+# ---------------------------------------------------------------------------
+# Serve throughput: fused hot loop vs per-token oracle (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def _edge_tiny_config() -> ArchConfig:
+    """A 1-layer edge-class config where per-token host overhead dominates
+    device compute — the profile that isolates what the fused loop removes
+    (dispatch + logits sync + host argmax per token)."""
+    return ArchConfig(name="edge-tiny", family="dense", n_layers=1,
+                      d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                      vocab=128, norm="rmsnorm")
+
+
+ENGINE_PROFILES = {
+    # name: engine geometry + workload (drain a queue of n_req prompts)
+    "edge_tiny": dict(cfg=_edge_tiny_config, n_slots=4, max_seq=64,
+                      decode_block=32, max_new=56, n_req=4, prompt_len=4,
+                      quick_max_new=56),
+    "smoke_lm": dict(arch="stablelm-1.6b", n_slots=4, max_seq=96,
+                     decode_block=32, max_new=88, n_req=4, prompt_len=4),
+    "smoke_moe_plan": dict(arch="deepseek-moe-16b", n_slots=4, max_seq=96,
+                           decode_block=32, max_new=88, n_req=4,
+                           prompt_len=4, planned=True),
+}
+
+
+def _drain_tps(eng, prompts, max_new: int) -> tuple:
+    """(tokens/sec, this wave's token lists) for one drained wave, honest
+    timestamps.  Only the wave's own requests count toward tokens/sec —
+    ``run_until_drained`` also returns requests finished in *earlier*
+    waves whose slots were never recycled, and counting those would
+    inflate the reported throughput."""
+    uids = [eng.submit(p, max_new=max_new) for p in prompts]
+    jax.block_until_ready(eng.state)
+    t0 = time.perf_counter()
+    res = eng.run_until_drained(max_steps=1 << 16)
+    jax.block_until_ready(eng.state)
+    dt = time.perf_counter() - t0
+    wave = [res[u] for u in uids]
+    return sum(len(v) for v in wave) / dt, wave
+
+
+def bench_serve_throughput(name: str, spec: dict, wt_sparsity: float,
+                           repeats: int = 3) -> Dict[str, object]:
+    """Fused ``decode_many`` loop vs the per-token oracle loop on one
+    engine profile: tokens/sec, speedup, host-overhead fraction, and a
+    token-stream identity check (the fused block must be the oracle's
+    tokens exactly — skipping host work, never changing the math)."""
+    if "cfg" in spec:
+        cfg = spec["cfg"]()
+    else:
+        cfg = get_smoke_config(spec["arch"])
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.float32)
+    exec_cfg = None
+    if spec.get("planned"):
+        params = _prune_stack(params, wt_sparsity)
+        sp_cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+            weight_sparsity=wt_sparsity, activation_threshold=0.05))
+        exec_cfg = decode_exec_config(sp_cfg, n_slots=spec["n_slots"],
+                                      params=params)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=spec["prompt_len"]
+                            ).astype(np.int32) for _ in range(spec["n_req"])]
+    kw = dict(n_slots=spec["n_slots"], max_seq=spec["max_seq"],
+              exec_cfg=exec_cfg, decode_block=spec["decode_block"])
+
+    tps: Dict[str, float] = {}
+    results: Dict[str, list] = {}
+    for label, fused in (("per_token", False), ("fused", True)):
+        eng = ServeEngine(cfg, params, fused=fused, **kw)
+        _drain_tps(eng, prompts, spec["max_new"])      # warm identical wave
+        best = 0.0
+        for _ in range(repeats):
+            t, res = _drain_tps(eng, prompts, spec["max_new"])
+            best = max(best, t)
+        tps[label], results[label] = best, res
+    assert results["per_token"] == results["fused"], \
+        f"{name}: fused tokens diverged from the per-token oracle"
+
+    # device-time estimate from an undonated twin (donated buffers can't be
+    # replayed): host-overhead fraction = (wall − device) / wall per token
+    timing = ServeEngine(cfg, params, fused=True, donate_state=False, **kw)
+    timing.submit(prompts[0], max_new=spec["decode_block"] + 2)
+    timing.decode_block_step(2)
+    toks = np.zeros((spec["n_slots"],), np.int32)
+    pos = np.full((spec["n_slots"],), 2, np.int32)
+    live = np.ones((spec["n_slots"],), bool)
+    t_blk = spec["decode_block"]
+    dev_fused = _median_time(
+        lambda: timing._decode_many(timing._exec_params, timing.state,
+                                    toks, pos, live, t_blk)[0],
+        n=5) / t_blk
+    dev_tok = _median_time(
+        lambda: timing._decode(timing._exec_params, toks[:, None],
+                               timing.state, pos)[0], n=5)
+    n_slots = spec["n_slots"]
+    host_frac = {
+        "per_token": max(0.0, 1.0 - dev_tok * tps["per_token"] / n_slots),
+        "fused": max(0.0, 1.0 - dev_fused * tps["fused"] / n_slots),
+    }
+    return {
+        "arch": cfg.name, "planned": bool(spec.get("planned")),
+        "n_slots": n_slots, "decode_block": spec["decode_block"],
+        "max_new": spec["max_new"], "n_requests": spec["n_req"],
+        "tokens_per_s": tps,
+        "speedup": tps["fused"] / tps["per_token"],
+        "device_s_per_token": {"per_token": dev_tok / n_slots,
+                               "fused": dev_fused / n_slots},
+        "host_overhead_fraction": host_frac,
+        "tokens_match": True,
+    }
+
+
+def bench_recalibration_after_fused(wt_sparsity: float) -> Dict[str, object]:
+    """Popcount feedback + ``maybe_recalibrate`` stay functional after a
+    fused run — the collect_stats callbacks fire from inside the scanned
+    block and the recompiled executables keep serving."""
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.float32)
+    sp_cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+        weight_sparsity=wt_sparsity, activation_threshold=0.05))
+    ec = decode_exec_config(sp_cfg, n_slots=2, params=params,
+                            collect_stats=True)
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=64, exec_cfg=ec)
+    eng.submit(np.asarray([3, 5, 7], np.int32), max_new=8)
+    eng.run_until_drained()
+    dens = eng.activation_densities()
+    measured = eng.maybe_recalibrate(drift_threshold=0.0)
+    uid = eng.submit(np.asarray([2, 4, 6], np.int32), max_new=4)
+    res = eng.run_until_drained()
+    return {"densities_after_fused": bool(dens),
+            "recalibrated": measured is not None,
+            "served_after_recalibrate": len(res.get(uid, [])) == 4}
+
+
 def run(out_path: str, verbose: bool = True,
         quick: bool = False) -> Dict[str, object]:
     profiles = ({"moderate": PROFILES["moderate"]} if quick else PROFILES)
     site_kw = (dict(m=128, k=256, n=256, timing_iters=5) if quick else {})
     n_steps = 6 if quick else 12
     report: Dict[str, object] = {"profiles": {}}
+
+    # serve throughput: the fused hot loop vs the per-token oracle, per
+    # engine profile (part of --quick so the perf trajectory carries a
+    # serving tokens/sec series from this PR onward)
+    wt_sp = PROFILES["moderate"]["weight_sparsity"]
+    serve: Dict[str, object] = {}
+    for name, spec in ENGINE_PROFILES.items():
+        spec = dict(spec)
+        if quick:
+            # trim the big smoke engines; edge_tiny keeps its full run —
+            # short waves under-amortize prefill and the 5x check rides
+            # on this profile
+            spec["max_new"] = min(spec["max_new"], spec.get("quick_max_new",
+                                                            40))
+        serve[name] = bench_serve_throughput(name, spec, wt_sp,
+                                             repeats=2 if quick else 3)
+        if verbose:
+            s = serve[name]
+            tp = s["tokens_per_s"]
+            print(f"serve[{name}] ({s['arch']}"
+                  f"{', planned' if s['planned'] else ''}): "
+                  f"per_token={tp['per_token']:.0f} tok/s "
+                  f"fused={tp['fused']:.0f} tok/s "
+                  f"speedup={s['speedup']:.2f}x  host_frac "
+                  f"pt={s['host_overhead_fraction']['per_token']:.2f} "
+                  f"fused={s['host_overhead_fraction']['fused']:.2f}")
+    serve["recalibration"] = bench_recalibration_after_fused(wt_sp)
+    report["serve_throughput"] = serve
+    if verbose:
+        rc = serve["recalibration"]
+        print(f"serve[recalibration after fused run]: "
+              f"densities={rc['densities_after_fused']} "
+              f"recalibrated={rc['recalibrated']} "
+              f"served_after={rc['served_after_recalibrate']}")
     for name, prof in profiles.items():
         site = bench_site(prof, **site_kw)
         eng = bench_engine(prof, n_steps=n_steps)
@@ -268,6 +448,23 @@ def run(out_path: str, verbose: bool = True,
 
 def validate(report: Dict[str, object]) -> list:
     failures = []
+    serve = report.get("serve_throughput", {})
+    speedups = {n: s["speedup"] for n, s in serve.items()
+                if isinstance(s, dict) and "speedup" in s}
+    if not speedups:
+        failures.append("no serve-throughput profiles in the report")
+    elif max(speedups.values()) < 5.0:
+        failures.append(
+            f"fused hot loop under 5x the per-token baseline on every "
+            f"engine profile: {speedups}")
+    for n, s in serve.items():
+        if isinstance(s, dict) and not s.get("tokens_match", True):
+            failures.append(f"serve[{n}]: fused tokens diverged")
+    rc = serve.get("recalibration", {})
+    if not (rc.get("densities_after_fused") and rc.get("recalibrated")
+            and rc.get("served_after_recalibrate")):
+        failures.append("popcount feedback / maybe_recalibrate broken "
+                        "after a fused run")
     for name, r in report["profiles"].items():
         md = r["site"]["modeled"]
         if not (md["two_sided"]["energy"] <= md["weight"]["energy"]

@@ -42,6 +42,16 @@ Runtime feedback: when a ``SparsityStatsCollector`` is installed
 (``sparsity_stats``), two-sided sites emit their activation popcounts via
 ``jax.debug.callback`` — the measured densities calibrate the scheduler's
 0.5 activation prior (``core.descriptors.sparsity_densities_for``).
+
+Fused serving blocks (``model.decode_many`` — a ``lax.scan`` over T decode
+steps with a donated state carry) change nothing here by design: the
+``PlannedWeight`` leaves are scan *constants* (attached params, not carry),
+so the precompiled metadata is fetched once per block rather than per
+token, and ``jax.debug.callback`` fires once per scanned step per site —
+a T-step block accumulates exactly the popcount window T per-token steps
+would.  Donation only aliases the state carry; plan arrays and collector
+identity are untouched (test-enforced by the post-fused recalibration
+regressions).
 """
 from __future__ import annotations
 

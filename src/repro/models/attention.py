@@ -221,7 +221,14 @@ def decode_step(p: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
                 pos: jax.Array, *, window: int = 0,
                 memory: Optional[Tuple[jax.Array, jax.Array]] = None,
                 ) -> Tuple[jax.Array, Params]:
-    """One-token decode.  x (B,1,D); cache k/v (B,C,KVH,hd); pos scalar.
+    """One-token decode.  x (B,1,D); cache k/v (B,C,KVH,hd).
+
+    ``pos`` is either a scalar (every sequence at the same depth — the
+    original lockstep serving path and the dry-run decode cells) or a (B,)
+    vector of per-sequence positions (the continuous-batching engine, where
+    staggered admits leave every slot at its own depth).  The scalar path is
+    kept verbatim: the vector path generalizes the cache write to a per-row
+    scatter and the validity mask to per-row position bounds.
 
     ``memory`` short-circuits to cross-attention (whisper decoder): attends
     to the fixed (k_mem, v_mem) without cache updates.
@@ -236,8 +243,11 @@ def decode_step(p: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
         o = o.reshape(b, 1, cfg.n_heads * hd)
         return ops.flex_matmul(o, p["wo"], site="attn.out"), cache
 
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
     q, k_new, v_new = _project_qkv(p, cfg, x)
-    posb = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    posb = (pos[:, None] if per_slot
+            else jnp.broadcast_to(pos[None, None], (b, 1))).astype(jnp.int32)
     qf = q.reshape(b, 1, cfg.n_heads, hd)
     qf = rope.apply_rope(qf, posb, kind=cfg.rope, theta=cfg.rope_theta)
     q = qf.reshape(q.shape)
@@ -245,23 +255,28 @@ def decode_step(p: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
 
     size = cache["k"].shape[1]
     slot = (pos % size) if window > 0 else jnp.minimum(pos, size - 1)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
-                                            k_new.astype(cache["k"].dtype),
-                                            slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
-                                            v_new.astype(cache["v"].dtype),
-                                            slot, axis=1)
+    if per_slot:
+        rows = jnp.arange(b)
+        k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
     k = shard(k, "cache_batch", "cache_seq", None, None)
     v = shard(v, "cache_batch", "cache_seq", None, None)
 
-    # validity mask over cache slots
-    idx = jnp.arange(size)
+    # validity mask over cache slots; per-row when pos is a vector
+    idx = jnp.arange(size)[None] if per_slot else jnp.arange(size)
+    posm = pos[:, None] if per_slot else pos
     if window > 0:
-        age = pos - _slot_position(idx, pos, size)
-        valid = (age >= 0) & (age < jnp.minimum(window, pos + 1))
+        age = posm - _slot_position(idx, posm, size)
+        valid = (age >= 0) & (age < jnp.minimum(window, posm + 1))
     else:
-        valid = idx <= pos
-    mask = valid[None, None, None, None, :]
+        valid = idx <= posm
+    mask = (valid[:, None, None, None, :] if per_slot
+            else valid[None, None, None, None, :])
     o = dense_attention(q, k, v, mask)
     o = o.reshape(b, 1, cfg.n_heads * hd)
     out = ops.flex_matmul(o, p["wo"], site="attn.out")

@@ -21,6 +21,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import attention, transformer
 from repro.models.layers import (apply_norm, chunked_softmax_xent, embed,
                                  init_embedding, init_norm, logits_head)
+from repro.models.unroll import maybe_unrolled_scan
 from repro.sharding.partition import shard
 
 Params = Dict[str, jax.Array]
@@ -164,11 +165,101 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
 
 def decode_step(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
                 pos: jax.Array) -> Tuple[jax.Array, Params]:
-    """One new token for every sequence.  tokens (B, 1) → logits (B, 1, V)."""
+    """One new token for every sequence.  tokens (B, 1) → logits (B, 1, V).
+
+    ``pos`` is a scalar (lockstep) or a (B,) vector of per-sequence
+    positions (see ``attention.decode_step``).
+    """
     x = embed(cfg, p["embed"], tokens)
     x, state = transformer.decode_stack(p["stack"], cfg, x, state, pos)
     x = apply_norm(p["final_norm"], cfg, x)
     return logits_head(cfg, head_matrix(p, cfg), x), state
+
+
+def _batch_mask(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast a (B,) bool mask over a stacked state leaf (L, B, ...)."""
+    return mask.reshape((1, mask.shape[0]) + (1,) * (leaf.ndim - 2))
+
+
+def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
+                pos: jax.Array, live: jax.Array, n_steps: int
+                ) -> Tuple[jax.Array, Params, jax.Array, jax.Array]:
+    """Fused multi-token greedy decode: ``n_steps`` decode steps in one
+    ``lax.scan``, with on-device argmax feeding the next token.
+
+    The serving hot loop: host work becomes O(1) per *block* of tokens
+    instead of per token — only the (T, B) token block crosses back to the
+    host.  ``tokens`` (B,) holds each sequence's current input token
+    (prompt tail or last generated), ``pos`` (B,) the per-sequence position
+    and ``live`` (B,) which rows decode (dead rows feed the same token-0
+    filler as the per-token engine path and never advance their token/
+    position carry, so a block step is computation-identical to a
+    ``decode_step`` call).
+
+    Returns (token block (T, B) int32, new state, final token carry (B,),
+    final position carry (B,)).  The carries let a serving loop chain
+    blocks *device-to-device*: as long as the live set is unchanged, the
+    next block's ``tokens``/``pos`` inputs are exactly these outputs — no
+    host round-trip or re-upload between blocks.
+    """
+    live = live.astype(bool)
+
+    def step(carry, _):
+        tok, st, ps = carry
+        feed = jnp.where(live, tok, 0).astype(jnp.int32)[:, None]
+        logits, st = decode_step(p, cfg, feed, st, ps)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        tok = jnp.where(live, nxt, tok)
+        ps = jnp.where(live, ps + 1, ps)
+        return (tok, st, ps), nxt
+
+    (tok, state, pos), toks = maybe_unrolled_scan(
+        step, (tokens.astype(jnp.int32), state, pos.astype(jnp.int32)),
+        None, length=n_steps)
+    return toks, state, tok, pos
+
+
+def prefill_into_slot(p: Params, cfg: ArchConfig, tokens: jax.Array,
+                      valid: jax.Array, slot: jax.Array, state: Params,
+                      slot_pos: jax.Array) -> Params:
+    """Feed one admitted prompt into one decode-state slot in a single
+    fused pass — uniform across dense / MoE / SSM / hybrid state families.
+
+    ``tokens`` (P,) is the prompt feed (``prompt[:-1]``, zero-padded to a
+    static length), ``valid`` (P,) marks real positions, ``slot`` the batch
+    row being filled, ``slot_pos`` (B,) every slot's current position (the
+    other rows run as masked filler).  Scans ``decode_step`` over the P
+    positions with per-slot positions, merging state updates **only at the
+    admitted row on valid steps** — live slots' rows are bit-untouched, and
+    the admitted row is zero-reset first so no recurrent state leaks from
+    the slot's previous occupant.  Every per-layer state leaf carries batch
+    at axis 1: (L, B, ...).
+    """
+    b = slot_pos.shape[0]
+    onehot = jnp.arange(b) == slot
+    # zero-reset the admitted row: recurrent families (SSM / RG-LRU) carry
+    # state across tokens, and the freed slot's old trajectory must not
+    # bleed into the new request (KV rows are masked by position anyway)
+    state = jax.tree.map(
+        lambda a: jnp.where(_batch_mask(onehot, a), jnp.zeros_like(a), a),
+        state)
+
+    def step(st, inp):
+        t, tok, ok = inp
+        feed = jnp.where(onehot & ok, tok, 0).astype(jnp.int32)[:, None]
+        ps = jnp.where(onehot, t, slot_pos).astype(jnp.int32)
+        _, new = decode_step(p, cfg, feed, st, ps)
+        merge = onehot & ok
+        st = jax.tree.map(
+            lambda old, nw: jnp.where(_batch_mask(merge, old), nw, old),
+            st, new)
+        return st, None
+
+    n = tokens.shape[0]
+    state, _ = maybe_unrolled_scan(
+        step, state, (jnp.arange(n, dtype=jnp.int32),
+                      tokens.astype(jnp.int32), valid.astype(bool)))
+    return state
 
 
 # ---------------------------------------------------------------------------

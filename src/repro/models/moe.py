@@ -15,6 +15,14 @@ Three execution paths, selected by mesh context:
     scatter-add combine.  Used without a mesh and for decode-scale T.
     Expert weights stay EP-sharded (E → "model"); XLA turns the gathers
     into local slices.
+Decode note (fused serving): the MoE layer is state-free — only the
+attention caches thread through the ``model.decode_many`` scan carry — but
+routing is *batch-coupled*: capacity slots are competed for across all
+decode rows, including the token-0 filler rows of idle slots.  The fused
+block and the per-token engine path therefore feed bit-identical batch
+contents per step (same filler, same live masking), which is what keeps
+the fused MoE stream token-for-token equal to the oracle.
+
   * **expert-parallel shard_map** (``_apply_moe_ep``): the production path.
     Tokens enter sequence-sharded over the EP axis (SP), each device
     routes its local tokens, buckets them by destination shard, exchanges

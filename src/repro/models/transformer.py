@@ -384,7 +384,16 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
 
 def decode_stack(p: Params, cfg: ArchConfig, x: jax.Array, state: Params,
                  pos: jax.Array) -> Tuple[jax.Array, Params]:
-    """One-token step through the full stack.  x (B,1,D)."""
+    """One-token step through the full stack.  x (B,1,D).
+
+    ``pos`` is a scalar or a (B,) per-sequence position vector — it flows
+    unchanged to ``attention.decode_step`` (the only consumer); recurrent
+    families (SSM / RG-LRU) are position-free.  Per-slot vectors are what
+    the serving engine's continuous batching passes (staggered admits), and
+    the whole stack body is what ``model.decode_many`` scans over T steps —
+    every state leaf returned here threads through that scan carry, so
+    state layouts must stay (L, B, ...) with batch at axis 1.
+    """
     def scan_kind(params_s, state_s, step):
         def body(h, inp):
             lp, st = inp

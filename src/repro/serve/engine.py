@@ -1,38 +1,65 @@
-"""Batched serving engine: continuous-batching prefill + decode.
+"""Batched serving engine: fused-loop continuous batching.
 
 Serving path of the framework (the assigned ``decode_*`` cells lower
 ``serve_step``).  Slot-based continuous batching: a fixed decode batch of
 ``n_slots`` sequences; finished sequences free their slot and queued
 requests are prefilled into it.
 
-Prefill uses the cache-filling fast path for plain dense stacks and falls
-back to token-by-token state feeding for heterogeneous families (MoE / SSM /
-hybrid) — the per-arch decode state layouts all come from
-``models.transformer.init_decode_state``.
+**Fused hot loop** (the data-movement view of serving, per FlexNN's
+movement-over-compute premise): the per-token host round-trip — one jitted
+dispatch, one logits sync, one host argmax per token — is the serving
+analogue of wasted operand movement, so the engine runs on-device
+executables whose host cost is O(1) per *batch of tokens*:
+
+  * ``models.model.decode_many`` — a ``lax.scan`` over T decode steps with
+    on-device greedy argmax feeding the next token; only the (T, n_slots)
+    token block returns to the host.  Positions are per-slot vectors and
+    live slots carry a mask, so staggered admits decode at their own depth
+    (the lockstep ``pos = max(live pos)`` hack is gone from every path).
+  * ``models.model.prefill_into_slot`` — a whole admitted prompt feeds one
+    slot through a single jitted scan with slot masking (one dispatch per
+    *request*, not per prompt token), uniform across dense / MoE / SSM /
+    hybrid state families; the admitted row is zero-reset first so no
+    recurrent state leaks from the slot's previous occupant.  Prompt feeds
+    are padded to power-of-two lengths so the trace count stays
+    O(log max_seq).
+  * **Donated decode state** — the fused executables take the decode state
+    with ``donate_argnums``, so the KV / recurrent caches mutate in place
+    instead of being copied every block.  The *params* (including attached
+    ``PlannedWeight`` plan arrays) are deliberately **not** donated: they
+    are inputs to every subsequent call, never outputs, so donating them
+    would consume live buffers for zero aliasing benefit.
+
+The per-token ``step()`` API is kept as the reference oracle: it runs the
+same per-slot-position ``decode_step`` one token at a time, and the fused
+block is computation-identical to T oracle steps (test-enforced
+token-for-token across dense, planned-sparse MoE and tied-head families).
+``run_until_drained`` drives the fused loop (``fused=False`` falls back to
+the oracle loop — the per-token baseline the throughput bench measures
+against), picking each block length as the min live-slot remaining budget
+clamped to ``decode_block`` so no slot overshoots its request.
 
 Sparsity/dataflow wiring: an optional ``ExecConfig`` (see ``kernels.ops``)
 is installed around every decode trace, so the engine's matmul sites consult
 their ``SiteDescriptor`` — per-site stationarity and ``weight``/``two_sided``
-block-sparse dispatch run inside the jitted decode step.
-``decode_exec_config`` compiles the decode-shape ``NetworkSchedule`` for an
-arch (the descriptor-register update at engine bring-up, §III-A); given the
-actual ``params`` it also compiles a ``WeightSparsityPlan`` — the static CSB
-weight metadata is hoisted to bring-up, the schedule is re-selected under
-the *measured* per-site weight densities, and ``ServeEngine`` attaches the
-plan into the params pytree so the jitted decode step receives it as
-ordinary arrays (no weight-side bitmap/argsort work per token).  Runtime
-activation-bitmap popcounts are accumulated per site
-(``activation_densities``) to calibrate the scheduler's activation prior,
-and ``maybe_recalibrate`` closes the loop: when the measured densities
-drift past a threshold from the ones the schedule was selected under, the
-engine recompiles the descriptor table + plan in place.
+block-sparse dispatch run inside the jitted executables (the attached
+``WeightSparsityPlan`` arrays ride through ``lax.scan`` + donation as
+ordinary jit inputs).  ``decode_exec_config`` compiles the decode-shape
+``NetworkSchedule`` for an arch; given ``params`` it also compiles the
+``WeightSparsityPlan`` at bring-up.  Runtime activation-bitmap popcounts
+accumulate per site across every scanned step (``activation_densities``),
+and ``maybe_recalibrate`` closes the loop: on density drift past the
+threshold the engine recompiles the descriptor table + plan in place and
+rebuilds all three jitted executables; decode state and in-flight requests
+carry over.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +140,10 @@ def activation_density_drift(baseline: Optional[Dict[str, float]],
     return drift
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 @dataclass
 class Request:
     uid: int
@@ -129,18 +160,34 @@ class _Slot:
 
 
 class ServeEngine:
+    """Continuous-batching engine over the fused on-device executables.
+
+    ``fused`` selects the production block-decode loop in
+    ``run_until_drained`` (False = the per-token oracle loop, the baseline
+    the throughput bench measures against); ``decode_block`` caps the fused
+    block length T (host work is O(1) per block); ``donate_state`` lets the
+    fused executables alias the decode state in place (False keeps the
+    state buffers alive across calls — used by timing harnesses that replay
+    one call repeatedly).
+    """
+
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
                  max_seq: int = 256, dtype=jnp.float32,
                  exec_cfg: Optional[ops.ExecConfig] = None,
-                 verify_plan: bool = True):
+                 verify_plan: bool = True, fused: bool = True,
+                 decode_block: int = 16, donate_state: bool = True):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.exec_cfg = exec_cfg
+        self.fused = fused
+        self.decode_block = decode_block
+        self.donate_state = donate_state
         self.state = model_lib.init_decode_state(cfg, n_slots, max_seq,
                                                  dtype=dtype)
         self.slots = [_Slot() for _ in range(n_slots)]
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self._uid = 0
+        self._mask_cache: Dict[tuple, jax.Array] = {}
         # weight-plan bring-up: attach precompiled CSB metadata into the
         # params pytree so the jitted step gets it as ordinary arrays.
         # verify_plan=False skips the coverage re-check (an extra
@@ -152,26 +199,61 @@ class ServeEngine:
         self._stats = (ops.SparsityStatsCollector()
                        if exec_cfg is not None and exec_cfg.collect_stats
                        else None)
+        self._build_executables()
 
-        def _decode_fn(p, t, s, pos):
+    # ---- jitted executables ----
+    def _scoped(self, fn):
+        """Wrap a model function so the engine's exec config (descriptor
+        table, plan, stats collector) is installed at trace time."""
+        def wrapped(*args, **kwargs):
             if self.exec_cfg is None:
-                return model_lib.decode_step(p, cfg, t, s, pos)
-            # thread-local exec config is read at trace time; installing it
-            # here scopes the descriptor table to this engine's decode step
+                return fn(*args, **kwargs)
             with contextlib.ExitStack() as scopes:
                 scopes.enter_context(ops.exec_config(self.exec_cfg))
                 if self._stats is not None:
                     scopes.enter_context(ops.sparsity_stats(self._stats))
-                return model_lib.decode_step(p, cfg, t, s, pos)
+                return fn(*args, **kwargs)
+        return wrapped
 
-        self._decode_fn = _decode_fn
-        self._decode = jax.jit(_decode_fn)
+    def _build_executables(self):
+        """(Re)build the three jitted entry points.  Called at bring-up and
+        after ``maybe_recalibrate`` swaps the exec config — the new jits
+        re-trace under the new descriptor table on their next call.
 
+        The fused executables donate the decode-state argument (argnum 1):
+        the KV / recurrent caches alias in place instead of being copied
+        every block.  The per-token oracle stays undonated — it is the
+        reference path, and keeping its inputs alive makes it safe to
+        replay against held state copies in tests and benches.
+        """
+        cfg = self.cfg
+        donate = (1,) if self.donate_state else ()
+
+        def decode_fn(p, t, s, pos):
+            return model_lib.decode_step(p, cfg, t, s, pos)
+
+        def decode_many_fn(p, s, toks, pos, live, n_steps):
+            return model_lib.decode_many(p, cfg, toks, s, pos, live, n_steps)
+
+        def prefill_fn(p, s, toks, valid, slot, slot_pos):
+            return model_lib.prefill_into_slot(p, cfg, toks, valid, slot, s,
+                                               slot_pos)
+
+        self._decode = jax.jit(self._scoped(decode_fn))
+        self._decode_many = jax.jit(self._scoped(decode_many_fn),
+                                    static_argnums=(5,),
+                                    donate_argnums=donate)
+        self._prefill = jax.jit(self._scoped(prefill_fn),
+                                donate_argnums=donate)
+
+    # ---- density feedback ----
     def activation_densities(self) -> Dict[str, float]:
         """Measured per-site activation densities from runtime bitmap
         popcounts (requires ``ExecConfig.collect_stats``) — feed back into
         ``decode_exec_config(act_densities=...)`` to recalibrate the
-        schedule selector's 0.5 prior.
+        schedule selector's 0.5 prior.  Fused blocks emit one popcount per
+        scanned step per site, so a T-step block accumulates the same
+        window as T oracle steps.
 
         Popcounts aggregate over the whole decode batch, including idle
         slots (which carry token-0 filler rows) — calibrate from a busy
@@ -191,8 +273,9 @@ class ServeEngine:
         *selected under* (``ExecConfig.act_densities``; absent sites were
         selected under the 0.5 prior), recompile the descriptor table via
         ``decode_exec_config(act_densities=measured)`` and swap it into the
-        engine — the jitted step re-traces under the new table on the next
-        call, decode state and in-flight requests carry over untouched.
+        engine — every jitted executable (per-token, fused block, prefill)
+        is rebuilt and re-traces under the new table on its next call,
+        decode state and in-flight requests carry over untouched.
         The weights didn't change, so the existing ``WeightSparsityPlan``
         (and the attached params) are *reused* whenever every planned
         site's block granularity survived the re-selection; only a site
@@ -270,7 +353,7 @@ class ServeEngine:
                 self._exec_params = (
                     self.plan.attach(self.params, verify=False)
                     if self.plan is not None else self.params)
-            self._decode = jax.jit(self._decode_fn)
+            self._build_executables()
         return measured
 
     # ---- request management ----
@@ -284,72 +367,218 @@ class ServeEngine:
         return [i for i, s in enumerate(self.slots)
                 if s.req is None or s.req.done]
 
-    def _admit(self):
-        """Prefill queued requests into free slots (token-by-token feed —
-        uniform across all state families; batch dim is the slot).
+    def _slot_positions(self) -> np.ndarray:
+        return np.asarray([s.pos for s in self.slots], np.int32)
 
-        The batched feed also touches other slots' state rows, so the new
-        state is merged back **only at the admitted slot** — live slots keep
-        their rows untouched (every per-layer state leaf carries batch at
-        axis 1: (L, B, ...))."""
+    def _admit(self):
+        """Prefill queued requests into free slots — one fused jitted call
+        per admitted request (``models.model.prefill_into_slot``): the whole
+        prompt feed scans on-device with slot masking, so host dispatch is
+        O(1) per request instead of O(prompt_len).
+
+        Slot masking merges state **only at the admitted row on valid
+        steps** — live slots keep their rows bit-untouched (every per-layer
+        state leaf carries batch at axis 1: (L, B, ...)), and the admitted
+        row is zero-reset so recurrent families never inherit the previous
+        occupant's state.  Feeds are padded to power-of-two lengths; padding
+        steps are fully masked, bounding traces at O(log max_seq)."""
+        admitted = False
         for i in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             self.slots[i] = _Slot(req=req, pos=0)
-            pre_state = self.state
-            for t, tok in enumerate(req.prompt[:-1]):
-                tok_b = jnp.zeros((self.n_slots, 1), jnp.int32
-                                  ).at[i, 0].set(int(tok))
-                _, self.state = self._decode(self._exec_params, tok_b,
-                                             self.state,
-                                             jnp.asarray(t, jnp.int32))
-            self.state = jax.tree.map(
-                lambda old, new: old.at[:, i].set(new[:, i]),
-                pre_state, self.state)
+            feed = np.asarray(req.prompt[:-1], np.int32)
+            padded = _next_pow2(max(len(feed), 1))
+            toks = np.zeros((padded,), np.int32)
+            toks[:len(feed)] = feed
+            valid = np.arange(padded) < len(feed)
+            self.state = self._prefill(self._exec_params, self.state,
+                                       toks, valid, np.int32(i),
+                                       self._slot_positions())
             self.slots[i].pos = max(len(req.prompt) - 1, 0)
+            admitted = True
+        return admitted
 
     # ---- decode ----
-    def step(self) -> Dict[int, int]:
-        """One decode step for every live slot; returns {uid: new_token}.
-
-        NOTE: slot positions are stepped together (lockstep pos = max live
-        pos) — sequences are left-aligned per slot; fine for the smoke-scale
-        engine, the production path shards slots across ``data``.
-        """
-        self._admit()
-        live = [i for i, s in enumerate(self.slots)
+    def _live(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
                 if s.req is not None and not s.req.done]
-        if not live:
-            return {}
-        toks = np.zeros((self.n_slots, 1), np.int32)
+
+    def _live_mask(self, live: List[int]) -> jax.Array:
+        """Device-resident (n_slots,) bool mask for ``live`` (cached per
+        live set — the mask is re-uploaded only when occupancy changes)."""
+        key = tuple(live)
+        if key not in self._mask_cache:
+            m = np.zeros((self.n_slots,), bool)
+            m[list(live)] = True
+            self._mask_cache[key] = jnp.asarray(m)
+        return self._mask_cache[key]
+
+    def _current_tokens(self, live: List[int]) -> np.ndarray:
+        toks = np.zeros((self.n_slots,), np.int32)
         for i in live:
             s = self.slots[i]
             hist = (list(s.req.prompt) + s.req.out)
-            toks[i, 0] = hist[s.pos] if s.pos < len(hist) else hist[-1]
-        pos = max(self.slots[i].pos for i in live)
-        logits, self.state = self._decode(self._exec_params,
-                                          jnp.asarray(toks), self.state,
-                                          jnp.asarray(pos, jnp.int32))
-        out = {}
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+            toks[i] = hist[s.pos] if s.pos < len(hist) else hist[-1]
+        return toks
+
+    def _append_token(self, i: int, tok: int, out: Dict[int, int]):
+        s = self.slots[i]
+        s.req.out.append(tok)
+        s.pos += 1
+        out[s.req.uid] = tok
+        if len(s.req.out) >= s.req.max_new or s.pos >= self.max_seq - 1:
+            s.req.done = True
+
+    def _append_block(self, live: List[int], block: np.ndarray,
+                      t_block: int) -> Dict[int, List[int]]:
+        """Credit a synced (T, n_slots) token block to its requests.
+
+        ``_block_len`` guarantees no live slot's budget is shorter than
+        ``t_block``, so every live slot takes the whole column — the
+        done-flag check after extending matches per-token semantics
+        exactly."""
+        out: Dict[int, List[int]] = {}
         for i in live:
             s = self.slots[i]
-            tok = int(nxt[i])
-            s.req.out.append(tok)
-            s.pos += 1
-            out[s.req.uid] = tok
+            toks_i = block[:t_block, i].tolist()
+            s.req.out.extend(toks_i)
+            s.pos += t_block
+            out[s.req.uid] = toks_i
             if len(s.req.out) >= s.req.max_new or s.pos >= self.max_seq - 1:
                 s.req.done = True
         return out
 
+    def step(self) -> Dict[int, int]:
+        """One decode step for every live slot; returns {uid: new_token}.
+
+        The per-token reference oracle: a fused T-block is computation-
+        identical to T of these steps (same per-slot position vectors, same
+        token-0 filler rows for dead slots).  The host syncs the logits and
+        runs argmax here — the cost the fused loop amortizes away.
+        """
+        self._admit()
+        live = self._live()
+        if not live:
+            return {}
+        toks = self._current_tokens(live)[:, None]
+        logits, self.state = self._decode(
+            self._exec_params, toks, self.state, self._slot_positions())
+        out: Dict[int, int] = {}
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in live:
+            self._append_token(i, int(nxt[i]), out)
+        return out
+
+    def _block_len(self, live: List[int], budget: int) -> int:
+        """Fused block length: min live-slot remaining (request budget and
+        sequence room), clamped to [1, budget] — no slot ever overshoots
+        its request, so a block is exactly T oracle steps and a freed slot
+        re-admits at the block boundary (the same step the oracle would
+        admit it).
+
+        The length is rounded *down* to a power of two: ``n_steps`` is a
+        static jit argument (the scan length), so each distinct value is a
+        full retrace+compile of the T-step executable — quantizing bounds
+        the compile count at O(log decode_block), the same trick as the
+        pow2-padded prefill feeds.  Rounding down keeps the no-overshoot
+        invariant (a request just drains in a couple of shorter tail
+        blocks)."""
+        rem = min(
+            max(min(s.req.max_new - len(s.req.out),
+                    (self.max_seq - 1) - s.pos), 1)
+            for s in (self.slots[i] for i in live))
+        t = max(1, min(rem, budget))
+        return 1 << (t.bit_length() - 1)       # largest pow2 <= t
+
+    def _run_block(self, live: List[int], t_block: int, toks_in, pos_in
+                   ) -> tuple:
+        """Dispatch one fused ``decode_many`` block and credit its tokens.
+
+        The single home of the block semantics, shared by the streaming
+        ``decode_block_step`` (host-built inputs) and the drain loop
+        (device-resident carries).  Returns ({uid: [tokens]}, token carry,
+        pos carry) — the carries feed the next block device-to-device when
+        occupancy is unchanged."""
+        block, self.state, dev_tok, dev_pos = self._decode_many(
+            self._exec_params, self.state, toks_in, pos_in,
+            self._live_mask(live), t_block)
+        block = np.asarray(block)            # (T, n_slots): ONE host sync
+        return self._append_block(live, block, t_block), dev_tok, dev_pos
+
+    def decode_block_step(self, n_steps: Optional[int] = None
+                          ) -> Dict[int, List[int]]:
+        """One fused block: admit, decode T steps on-device, sync the (T,
+        n_slots) token block once.  Returns {uid: [tokens]} for live slots.
+        ``n_steps`` caps the block (default ``decode_block``); the min
+        live-slot remaining budget still bounds it, so no request
+        overshoots.
+        """
+        self._admit()
+        live = self._live()
+        if not live:
+            return {}
+        t_block = self._block_len(
+            live, self.decode_block if n_steps is None else n_steps)
+        out, _, _ = self._run_block(live, t_block,
+                                    self._current_tokens(live),
+                                    self._slot_positions())
+        return out
+
+    def _collect(self, results: Dict[int, List[int]]):
+        for s in self.slots:
+            if s.req is not None and s.req.done:
+                results[s.req.uid] = s.req.out
+
     def run_until_drained(self, max_steps: int = 1024) -> Dict[int, List[int]]:
+        """Serve until queue and slots drain (or ``max_steps`` decode
+        steps).  ``fused=True`` drives ``decode_many`` blocks — host work
+        per block is one dispatch and one token-block sync; ``fused=False``
+        is the per-token oracle loop."""
+        if not self.fused:
+            return self._run_per_token(max_steps)
+        results: Dict[int, List[int]] = {}
+        steps = 0
+        # device-resident block carries: while the live set is unchanged,
+        # decode_many's (token, pos) outputs ARE the next block's inputs —
+        # blocks chain device-to-device and the only per-block host↔device
+        # traffic is the (T, n_slots) token-block sync
+        dev_tok = dev_pos = None
+        live_key: Optional[List[int]] = None
+        while steps < max_steps:
+            # capture already-finished slots before admission overwrites
+            # them (requests can finish in decode_block_step/step calls
+            # made outside this drain)
+            self._collect(results)
+            admitted = self._admit()
+            live = self._live()
+            if not live:
+                self._collect(results)
+                break
+            t_block = self._block_len(
+                live, min(self.decode_block, max_steps - steps))
+            if admitted or live != live_key or dev_tok is None:
+                toks_in = self._current_tokens(live)
+                pos_in = self._slot_positions()
+                live_key = live
+            else:
+                toks_in, pos_in = dev_tok, dev_pos
+            _, dev_tok, dev_pos = self._run_block(live, t_block, toks_in,
+                                                  pos_in)
+            steps += t_block
+            self._collect(results)
+            if not self.queue and all(s.req is None or s.req.done
+                                      for s in self.slots):
+                break
+        return results
+
+    def _run_per_token(self, max_steps: int) -> Dict[int, List[int]]:
         results: Dict[int, List[int]] = {}
         for _ in range(max_steps):
+            self._collect(results)      # before step()'s admit overwrites
             self.step()
-            for s in self.slots:
-                if s.req is not None and s.req.done:
-                    results[s.req.uid] = s.req.out
+            self._collect(results)
             if not self.queue and all(s.req is None or s.req.done
                                       for s in self.slots):
                 break
