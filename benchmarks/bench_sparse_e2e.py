@@ -18,6 +18,11 @@ For each sparsity profile this measures, on CPU:
     drain-a-queue engine profiles: tokens/sec, speedup, and the
     host-overhead fraction (wall − device time) per path.  The fused and
     per-token token streams are asserted identical,
+  * **serve load generator** — continuous batching under Poisson arrivals
+    with mixed prompt/output lengths: p50/p99 time-to-first-token and
+    tokens/sec-per-slot with chunked prefill on vs the stall-on-prefill
+    baseline, with the chunked greedy stream asserted token-for-token
+    equal to the per-token oracle (``serve_load`` in the report),
   * **modeled energy + cycles** — the paper's own evaluation framework
     (``core.energy_model``) on the equivalent layer, per sparsity variant,
   * **modeled HBM traffic / roofline time** — the TPU-native schedule
@@ -311,13 +316,15 @@ def bench_serve_throughput(name: str, spec: dict, wt_sparsity: float,
     pos = np.full((spec["n_slots"],), 2, np.int32)
     live = np.ones((spec["n_slots"],), bool)
     t_blk = spec["decode_block"]
+    rem = np.full((spec["n_slots"],), 1 << 20, np.int32)
     dev_fused = _median_time(
         lambda: timing._decode_many(timing._exec_params, timing.state,
-                                    toks, pos, live, t_blk)[0],
+                                    toks, pos, live, rem, None, None, None,
+                                    t_blk)[0],
         n=5) / t_blk
     dev_tok = _median_time(
         lambda: timing._decode(timing._exec_params, toks[:, None],
-                               timing.state, pos)[0], n=5)
+                               timing.state, pos, live)[0], n=5)
     n_slots = spec["n_slots"]
     host_frac = {
         "per_token": max(0.0, 1.0 - dev_tok * tps["per_token"] / n_slots),
@@ -357,6 +364,143 @@ def bench_recalibration_after_fused(wt_sparsity: float) -> Dict[str, object]:
     return {"densities_after_fused": bool(dens),
             "recalibrated": measured is not None,
             "served_after_recalibrate": len(res.get(uid, [])) == 4}
+
+
+# ---------------------------------------------------------------------------
+# Load generator: Poisson arrivals, mixed lengths, chunked prefill on/off
+# ---------------------------------------------------------------------------
+
+def _make_workload(cfg, quick: bool, seed: int = 0) -> list:
+    """[(arrival_s, prompt, max_new)] — Poisson arrivals with a mixed
+    prompt/output-length distribution.  Long-prompt requests arrive in a
+    burst at the head (a second burst mid-run in full mode): the stall
+    baseline's admit loop serializes their whole-prompt scans — each
+    pow2-padded to ~2× the real feed (130 → 256 scanned steps) — inside a
+    single engine tick, so every burst member AND every short request
+    arriving during that tick inherits the summed stall; the chunked
+    engine round-robins tightly-padded chunks instead.  The workload is a
+    pure function of ``seed``, so every engine configuration serves the
+    identical request trace."""
+    rng = np.random.default_rng(seed)
+    n_req = 12 if quick else 24
+    long_len = 130                # feed 129 → whole-prefill pads to 256
+    long_at = {0, 1, 2} if quick else {0, 1, 2, 12, 13}
+    t = 0.0
+    work = []
+    for j in range(n_req):
+        # burst members share an arrival instant — the stall baseline must
+        # then admit (and serialize) all of them inside one tick
+        if not (j in long_at and j - 1 in long_at):
+            t += float(rng.exponential(scale=0.008))
+        if j in long_at:
+            plen, max_new = long_len, 8
+        else:
+            plen = int(rng.integers(4, 10))
+            max_new = int(rng.integers(8, 17))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        work.append((t, prompt, max_new))
+    return work
+
+
+def _run_traffic(eng, workload) -> Dict[str, object]:
+    """Replay a timed workload against a live engine: submit each request
+    at its arrival instant, tick ``decode_block_step`` (one admit + one
+    prefill chunk + one fused block per tick), and record per-request
+    time-to-first-token against the arrival time."""
+    t0 = time.perf_counter()
+    arrive, first_tok, n_toks = {}, {}, {}
+    idx, outstanding = 0, set()
+    ticks = []
+    while idx < len(workload) or outstanding:
+        now = time.perf_counter() - t0
+        while idx < len(workload) and workload[idx][0] <= now:
+            arr, prompt, max_new = workload[idx]
+            uid = eng.submit(prompt, max_new=max_new)
+            arrive[uid] = now
+            outstanding.add(uid)
+            idx += 1
+        tick0 = time.perf_counter()
+        out = eng.decode_block_step()
+        ticks.append(time.perf_counter() - tick0)
+        now = time.perf_counter() - t0
+        for uid, toks in out.items():
+            if toks and uid not in first_tok:
+                first_tok[uid] = now
+            n_toks.setdefault(uid, []).extend(toks)
+        for s in eng.slots:
+            if s.req is not None and s.req.done:
+                outstanding.discard(s.req.uid)
+        if not out and not eng._prefilling() and idx < len(workload):
+            time.sleep(0.0005)      # truly idle: wait for the next arrival
+    wall = time.perf_counter() - t0
+    ttft = [first_tok[u] - arrive[u] for u in arrive]
+    total = sum(len(v) for v in n_toks.values())
+    return {
+        "requests": len(arrive),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "tokens_per_s_per_slot": total / wall / eng.n_slots,
+        "tick_p50_s": float(np.percentile(ticks, 50)),
+        "tick_max_s": float(max(ticks)),
+        # per-request series in submit order (uids differ across runs)
+        "ttft_s": ttft,
+        "tokens": [n_toks.get(u, []) for u in arrive],
+    }
+
+
+def bench_serve_loadgen(quick: bool = False, seed: int = 0
+                        ) -> Dict[str, object]:
+    """Continuous batching under real traffic: Poisson arrivals with mixed
+    prompt/output lengths on the edge-tiny engine, chunked prefill on vs
+    off (the stall-on-prefill baseline), plus a drained per-token oracle
+    run asserting the greedy fused trace stayed token-for-token exact.
+
+    The structural claim: with chunking, a long prompt admits across many
+    ticks (one chunk interleaved per decode block), so a short request
+    arriving behind it gets its first block within a couple of tick times
+    — the stall baseline serializes every queued request behind the whole
+    prompt scan, which is what its p99 TTFT measures."""
+    cfg = _edge_tiny_config()
+    kw = dict(n_slots=4, max_seq=256, decode_block=8, eos_id=7)
+    chunk = 128
+    workload = _make_workload(cfg, quick, seed)
+    is_long = [len(p) >= 64 for _, p, _ in workload]
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.float32)
+    out: Dict[str, object] = {
+        "arch": cfg.name, "n_requests": len(workload),
+        "prompt_lens": sorted({len(p) for _, p, _ in workload}),
+        **{k: v for k, v in kw.items() if k != "eos_id"},
+        "eos_id": kw["eos_id"], "prefill_chunk": chunk,
+    }
+    traces = {}
+    for label, pc in (("chunked", chunk), ("stall", None)):
+        eng = ServeEngine(cfg, params, fused=True, prefill_chunk=pc, **kw)
+        # compile every dispatchable shape off the clock — the jitted
+        # entry points are per-engine closures, so this must run on the
+        # measured engine itself
+        eng.warmup()
+        tr = _run_traffic(eng, workload)
+        traces[label] = tr
+        short = [t for t, lg in zip(tr["ttft_s"], is_long) if not lg]
+        long_ = [t for t, lg in zip(tr["ttft_s"], is_long) if lg]
+        out[label] = {k: v for k, v in tr.items()
+                      if k not in ("tokens", "ttft_s")}
+        out[label]["ttft_short_p99_s"] = float(np.percentile(short, 99))
+        out[label]["ttft_long_max_s"] = float(max(long_))
+    # greedy correctness under traffic: the chunked fused engine must emit
+    # exactly the per-token oracle's tokens (arrival timing reorders the
+    # schedule, never the math — masked state commits keep slots
+    # independent)
+    oracle = ServeEngine(cfg, params, fused=False, **kw)
+    uids = [oracle.submit(p, max_new=mn) for _, p, mn in workload]
+    res = oracle.run_until_drained(max_steps=1 << 14)
+    oracle_toks = [res[u] for u in uids]
+    out["tokens_match_oracle"] = traces["chunked"]["tokens"] == oracle_toks
+    if not out["tokens_match_oracle"]:
+        out["mismatch"] = {"chunked": traces["chunked"]["tokens"],
+                           "oracle": oracle_toks}
+    return out
 
 
 def run(out_path: str, verbose: bool = True,
@@ -399,6 +543,21 @@ def run(out_path: str, verbose: bool = True,
               f"densities={rc['densities_after_fused']} "
               f"recalibrated={rc['recalibrated']} "
               f"served_after={rc['served_after_recalibrate']}")
+    # load generator: Poisson arrivals + mixed lengths, chunked prefill vs
+    # the stall-on-prefill baseline — the p50/p99 TTFT series in the perf
+    # trajectory from this PR onward (part of --quick)
+    lg = bench_serve_loadgen(quick=quick)
+    report["serve_load"] = lg
+    if verbose:
+        for label in ("chunked", "stall"):
+            t = lg[label]
+            print(f"loadgen[{label}]: ttft p50={t['ttft_p50_s']*1e3:.1f} ms "
+                  f"p99={t['ttft_p99_s']*1e3:.1f} ms  "
+                  f"{t['tokens_per_s_per_slot']:.0f} tok/s/slot  "
+                  f"tick p50={t['tick_p50_s']*1e3:.1f} ms "
+                  f"max={t['tick_max_s']*1e3:.1f} ms")
+        print(f"loadgen: chunked tokens == oracle: "
+              f"{lg['tokens_match_oracle']}")
     for name, prof in profiles.items():
         site = bench_site(prof, **site_kw)
         eng = bench_engine(prof, n_steps=n_steps)
@@ -465,6 +624,19 @@ def validate(report: Dict[str, object]) -> list:
             and rc.get("served_after_recalibrate")):
         failures.append("popcount feedback / maybe_recalibrate broken "
                         "after a fused run")
+    lg = report.get("serve_load", {})
+    if not lg:
+        failures.append("no load-generator section in the report")
+    else:
+        if not lg.get("tokens_match_oracle"):
+            failures.append("loadgen: chunked fused tokens diverged from "
+                            "the per-token oracle")
+        p99_c = lg.get("chunked", {}).get("ttft_p99_s", float("inf"))
+        p99_s = lg.get("stall", {}).get("ttft_p99_s", 0.0)
+        if not p99_c < p99_s:
+            failures.append(
+                f"loadgen: chunked prefill did not improve p99 TTFT "
+                f"(chunked={p99_c:.4f}s vs stall={p99_s:.4f}s)")
     for name, r in report["profiles"].items():
         md = r["site"]["modeled"]
         if not (md["two_sided"]["energy"] <= md["weight"]["energy"]

@@ -166,12 +166,46 @@ def sparsity_stats(collector: SparsityStatsCollector):
         _state.collector = prev
 
 
+@contextlib.contextmanager
+def active_rows(mask):
+    """Install a (B,) bool row-validity mask for the enclosed trace region.
+
+    The serving batch always carries ``n_slots`` rows, but only some are
+    *live* (dead slots and done/mid-prefill rows run token-0 filler).  The
+    model's decode/prefill entry points install the mask they already carry
+    (``decode_many``'s active mask, ``prefill_into_slot``'s admitted-row
+    merge mask) around the inner ``decode_step`` so popcount accumulation
+    counts live rows only — otherwise filler rows skew
+    ``maybe_recalibrate`` toward the filler token's density at low
+    occupancy.  ``mask`` may be a tracer: the scope is entered inside the
+    traced function, so the masked popcount lowers into the same jaxpr.
+    Sites whose leading operand dim is not the slot batch (e.g. the
+    capacity-padded MoE expert buffers) ignore the mask — their rows encode
+    routing occupancy, not slot liveness.
+    """
+    prev = getattr(_state, "rows", None)
+    _state.rows = mask
+    try:
+        yield mask
+    finally:
+        _state.rows = prev
+
+
 def _record_act_stats(site: str, x2: jax.Array) -> None:
     col = getattr(_state, "collector", None)
     if col is None or not site:
         return
-    live = jnp.sum((x2 != 0).astype(jnp.int32))
-    jax.debug.callback(functools.partial(col.record, site), live, x2.size)
+    rows = getattr(_state, "rows", None)
+    if rows is not None and x2.ndim == 2 and rows.shape[0] == x2.shape[0]:
+        # count live rows only: a 1-live-of-N engine must measure the same
+        # density as a 1-slot engine (test-enforced)
+        live = jnp.sum(jnp.where(rows[:, None], x2 != 0, False)
+                       .astype(jnp.int32))
+        total = jnp.sum(rows.astype(jnp.int32)) * x2.shape[-1]
+    else:
+        live = jnp.sum((x2 != 0).astype(jnp.int32))
+        total = x2.size
+    jax.debug.callback(functools.partial(col.record, site), live, total)
 
 
 def _leading_flat(x: jax.Array):

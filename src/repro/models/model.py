@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.kernels import ops
 from repro.models import attention, transformer
 from repro.models.layers import (apply_norm, chunked_softmax_xent, embed,
                                  init_embedding, init_norm, logits_head)
@@ -181,78 +182,165 @@ def _batch_mask(mask: jax.Array, leaf: jax.Array) -> jax.Array:
     return mask.reshape((1, mask.shape[0]) + (1,) * (leaf.ndim - 2))
 
 
+def masked_decode_step(p: Params, cfg: ArchConfig, tokens: jax.Array,
+                       state: Params, pos: jax.Array, active: jax.Array
+                       ) -> Tuple[jax.Array, Params]:
+    """``decode_step`` that only commits state for ``active`` (B,) rows.
+
+    Inactive rows (dead slots, EOS-done rows, mid-prefill rows running as
+    filler) keep their state bit-untouched: a mid-prefill slot's partially
+    written KV/recurrent prefix must survive the decode blocks interleaved
+    between its chunks, and a done row stops writing cache.  The mask is
+    also installed as the popcount row filter (``ops.active_rows``) so
+    runtime activation densities count live rows only.
+    """
+    with ops.active_rows(active):
+        logits, new = decode_step(p, cfg, tokens, state, pos)
+    state = jax.tree.map(
+        lambda old, nw: jnp.where(_batch_mask(active, old), nw, old),
+        state, new)
+    return logits, state
+
+
+def sample_tokens(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
+                  seeds: jax.Array, pos: jax.Array) -> jax.Array:
+    """Per-row temperature / top-k sampling over (B, V) logits.
+
+    ``temp`` (B,) float: 0 selects greedy argmax for that row (bit-equal to
+    the plain argmax path — the fused-vs-oracle token-for-token guarantees
+    live on greedy rows).  ``top_k`` (B,) int: keep the k highest logits
+    (0 or ≥ V disables).  Randomness is *position-keyed*: row r at sequence
+    position p draws from ``fold_in(PRNGKey(seeds[r]), p)``, so a sampled
+    stream is a pure function of (seed, position) — reproducible across
+    runs and invariant to how the serving loop blocks its decode steps
+    (a T-step fused block samples exactly what T oracle steps would).
+    """
+    v = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    k = jnp.clip(top_k, 1, v)
+    top_desc = -jnp.sort(-lg, axis=-1)
+    thresh = jnp.take_along_axis(top_desc, (k - 1)[:, None], axis=-1)
+    use_k = (top_k > 0) & (top_k < v)
+    masked = jnp.where(use_k[:, None] & (lg < thresh), -jnp.inf, lg)
+    keys = jax.vmap(lambda s, t: jax.random.fold_in(jax.random.PRNGKey(s), t)
+                    )(seeds.astype(jnp.uint32), pos.astype(jnp.uint32))
+    gumbel = jax.vmap(lambda key: jax.random.gumbel(key, (v,), jnp.float32)
+                      )(keys)
+    sampled = jnp.argmax(masked / jnp.maximum(temp, 1e-6)[:, None] + gumbel,
+                         axis=-1).astype(jnp.int32)
+    return jnp.where(temp > 0, sampled, greedy)
+
+
 def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
-                pos: jax.Array, live: jax.Array, n_steps: int
-                ) -> Tuple[jax.Array, Params, jax.Array, jax.Array]:
-    """Fused multi-token greedy decode: ``n_steps`` decode steps in one
-    ``lax.scan``, with on-device argmax feeding the next token.
+                pos: jax.Array, live: jax.Array, n_steps: int, *,
+                rem: Optional[jax.Array] = None,
+                eos_id: Optional[int] = None,
+                temp: Optional[jax.Array] = None,
+                top_k: Optional[jax.Array] = None,
+                seeds: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Params, jax.Array, jax.Array,
+                           jax.Array]:
+    """Fused multi-token decode: ``n_steps`` decode steps in one
+    ``lax.scan``, with on-device token selection feeding the next token.
 
     The serving hot loop: host work becomes O(1) per *block* of tokens
     instead of per token — only the (T, B) token block crosses back to the
     host.  ``tokens`` (B,) holds each sequence's current input token
     (prompt tail or last generated), ``pos`` (B,) the per-sequence position
-    and ``live`` (B,) which rows decode (dead rows feed the same token-0
-    filler as the per-token engine path and never advance their token/
-    position carry, so a block step is computation-identical to a
-    ``decode_step`` call).
+    and ``live`` (B,) which rows decode.
+
+    Per-row stopping runs **on device**: ``rem`` (B,) int32 is each row's
+    remaining token budget (None = unbounded) and ``eos_id`` the stop
+    token (static; None disables).  A row is *active* while live with
+    budget left; emitting ``eos_id`` zeroes its budget.  Inactive rows
+    feed token-0 filler, stop writing cache (state commits are masked to
+    active rows via ``masked_decode_step``), never advance their token /
+    position carries, and emit a ``-1`` sentinel — the host truncates each
+    slot's block column at its sentinel, so one short request no longer
+    forces the whole batch onto its block length.
+
+    ``temp`` / ``top_k`` / ``seeds`` (all (B,), or all None for pure
+    greedy) select per-row sampling (see ``sample_tokens``); randomness is
+    position-keyed, so sampled streams are block-boundary invariant too.
 
     Returns (token block (T, B) int32, new state, final token carry (B,),
-    final position carry (B,)).  The carries let a serving loop chain
-    blocks *device-to-device*: as long as the live set is unchanged, the
-    next block's ``tokens``/``pos`` inputs are exactly these outputs — no
-    host round-trip or re-upload between blocks.
+    final position carry (B,), final remaining-budget carry (B,)).  The
+    carries let a serving loop chain blocks *device-to-device*: as long as
+    the live set is unchanged, the next block's ``tokens``/``pos`` inputs
+    are exactly these outputs — no host round-trip or re-upload between
+    blocks.
     """
     live = live.astype(bool)
+    b = tokens.shape[0]
+    if rem is None:
+        rem = jnp.full((b,), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    eos = jnp.int32(-1 if eos_id is None else eos_id)
+    sample = temp is not None
 
     def step(carry, _):
-        tok, st, ps = carry
-        feed = jnp.where(live, tok, 0).astype(jnp.int32)[:, None]
-        logits, st = decode_step(p, cfg, feed, st, ps)
-        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-        tok = jnp.where(live, nxt, tok)
-        ps = jnp.where(live, ps + 1, ps)
-        return (tok, st, ps), nxt
+        tok, st, ps, rm = carry
+        active = live & (rm > 0)
+        feed = jnp.where(active, tok, 0).astype(jnp.int32)[:, None]
+        logits, st = masked_decode_step(p, cfg, feed, st, ps, active)
+        lg = logits[:, 0, :]
+        if sample:
+            nxt = sample_tokens(lg, temp, top_k, seeds, ps)
+        else:
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        emit = jnp.where(active, nxt, -1)
+        rm = jnp.where(active, jnp.where(nxt == eos, 0, rm - 1), rm)
+        tok = jnp.where(active, nxt, tok)
+        ps = jnp.where(active, ps + 1, ps)
+        return (tok, st, ps, rm), emit
 
-    (tok, state, pos), toks = maybe_unrolled_scan(
-        step, (tokens.astype(jnp.int32), state, pos.astype(jnp.int32)),
-        None, length=n_steps)
-    return toks, state, tok, pos
+    (tok, state, pos, rem), toks = maybe_unrolled_scan(
+        step, (tokens.astype(jnp.int32), state, pos.astype(jnp.int32),
+               rem.astype(jnp.int32)), None, length=n_steps)
+    return toks, state, tok, pos, rem
 
 
 def prefill_into_slot(p: Params, cfg: ArchConfig, tokens: jax.Array,
                       valid: jax.Array, slot: jax.Array, state: Params,
-                      slot_pos: jax.Array) -> Params:
-    """Feed one admitted prompt into one decode-state slot in a single
-    fused pass — uniform across dense / MoE / SSM / hybrid state families.
+                      slot_pos: jax.Array, start: jax.Array = 0,
+                      reset: jax.Array = True) -> Params:
+    """Feed one admitted prompt (or one *chunk* of it) into one decode-state
+    slot in a single fused pass — uniform across dense / MoE / SSM / hybrid
+    state families.
 
-    ``tokens`` (P,) is the prompt feed (``prompt[:-1]``, zero-padded to a
-    static length), ``valid`` (P,) marks real positions, ``slot`` the batch
-    row being filled, ``slot_pos`` (B,) every slot's current position (the
-    other rows run as masked filler).  Scans ``decode_step`` over the P
-    positions with per-slot positions, merging state updates **only at the
-    admitted row on valid steps** — live slots' rows are bit-untouched, and
-    the admitted row is zero-reset first so no recurrent state leaks from
-    the slot's previous occupant.  Every per-layer state leaf carries batch
-    at axis 1: (L, B, ...).
+    ``tokens`` (P,) is the prompt feed segment (zero-padded to a static
+    length), ``valid`` (P,) marks real positions, ``slot`` the batch row
+    being filled, ``slot_pos`` (B,) every slot's current position (the
+    other rows run as masked filler).  ``start`` is the sequence position
+    of the segment's first token — chunked prefill feeds
+    ``feed[c : c+chunk]`` with ``start = c`` so a long prompt admits across
+    several calls interleaved with decode blocks.  ``reset`` zero-resets
+    the admitted row before feeding (True on the whole-prompt path and on
+    chunk 0; later chunks must NOT re-reset the prefix they already wrote).
+
+    Scans ``decode_step`` over the P positions with per-slot positions,
+    merging state updates **only at the admitted row on valid steps** —
+    live slots' rows are bit-untouched, and the zero-reset stops recurrent
+    state leaking from the slot's previous occupant.  Every per-layer state
+    leaf carries batch at axis 1: (L, B, ...).
     """
     b = slot_pos.shape[0]
     onehot = jnp.arange(b) == slot
     # zero-reset the admitted row: recurrent families (SSM / RG-LRU) carry
     # state across tokens, and the freed slot's old trajectory must not
     # bleed into the new request (KV rows are masked by position anyway)
+    reset_row = onehot & jnp.asarray(reset, bool)
     state = jax.tree.map(
-        lambda a: jnp.where(_batch_mask(onehot, a), jnp.zeros_like(a), a),
+        lambda a: jnp.where(_batch_mask(reset_row, a), jnp.zeros_like(a), a),
         state)
+    start = jnp.asarray(start, jnp.int32)
 
     def step(st, inp):
         t, tok, ok = inp
-        feed = jnp.where(onehot & ok, tok, 0).astype(jnp.int32)[:, None]
-        ps = jnp.where(onehot, t, slot_pos).astype(jnp.int32)
-        _, new = decode_step(p, cfg, feed, st, ps)
         merge = onehot & ok
-        st = jax.tree.map(
-            lambda old, nw: jnp.where(_batch_mask(merge, old), nw, old),
-            st, new)
+        feed = jnp.where(merge, tok, 0).astype(jnp.int32)[:, None]
+        ps = jnp.where(onehot, start + t, slot_pos).astype(jnp.int32)
+        _, st = masked_decode_step(p, cfg, feed, st, ps, merge)
         return st, None
 
     n = tokens.shape[0]

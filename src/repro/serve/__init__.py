@@ -1,1 +1,6 @@
-"""repro.serve subsystem."""
+"""repro.serve subsystem: continuous-batching engine over the flex-sparse
+dispatch stack."""
+from repro.serve.engine import (Request, SamplingParams, ServeEngine,
+                                decode_exec_config)
+
+__all__ = ["Request", "SamplingParams", "ServeEngine", "decode_exec_config"]

@@ -12,15 +12,25 @@ analogue of wasted operand movement, so the engine runs on-device
 executables whose host cost is O(1) per *batch of tokens*:
 
   * ``models.model.decode_many`` — a ``lax.scan`` over T decode steps with
-    on-device greedy argmax feeding the next token; only the (T, n_slots)
+    on-device token selection (greedy argmax, or temperature/top-k
+    sampling keyed by (seed, position) when a live request carries
+    ``SamplingParams``) feeding the next token; only the (T, n_slots)
     token block returns to the host.  Positions are per-slot vectors and
-    live slots carry a mask, so staggered admits decode at their own depth
-    (the lockstep ``pos = max(live pos)`` hack is gone from every path).
-  * ``models.model.prefill_into_slot`` — a whole admitted prompt feeds one
-    slot through a single jitted scan with slot masking (one dispatch per
-    *request*, not per prompt token), uniform across dense / MoE / SSM /
-    hybrid state families; the admitted row is zero-reset first so no
-    recurrent state leaks from the slot's previous occupant.  Prompt feeds
+    live slots carry a mask; a per-slot ``rem`` budget and optional
+    ``eos_id`` stop each row *inside* the scan — an inactive row stops
+    writing cache and emits a -1 sentinel, so one short request no longer
+    shrinks everyone's block (``_block_len`` sizes blocks by the *max*
+    remaining budget and ``_append_block`` truncates each column at its
+    sentinel).
+  * ``models.model.prefill_into_slot`` — admitted prompts feed one slot
+    through jitted scans with slot masking (one dispatch per *segment*,
+    not per prompt token), uniform across dense / MoE / SSM / hybrid state
+    families; the admitted row is zero-reset on the first segment so no
+    recurrent state leaks from the slot's previous occupant.  With
+    ``prefill_chunk`` set, long prompts feed in fixed-size chunks
+    interleaved one-per-iteration with decode blocks (``_Slot`` tracks a
+    ``prefill_cursor``; a mid-prefill slot rides decode dispatches as a
+    masked filler row), so admission never stalls live decodes.  Segments
     are padded to power-of-two lengths so the trace count stays
     O(log max_seq).
   * **Donated decode state** — the fused executables take the decode state
@@ -144,11 +154,30 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy.
+
+    ``temperature`` 0 (the default) is greedy argmax — the fused-vs-oracle
+    token-for-token guarantees live on this path.  ``temperature > 0``
+    samples from the temperature-scaled distribution, truncated to the
+    ``top_k`` highest logits when ``top_k > 0``.  Randomness is
+    position-keyed — row r at position p draws from
+    ``fold_in(PRNGKey(seed), p)`` — so a sampled stream is reproducible
+    from ``seed`` alone and invariant to how the engine blocks its decode
+    steps (fused blocks sample exactly what per-token oracle steps would).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
 @dataclass
 class Request:
     uid: int
     prompt: np.ndarray            # (S,) int32
     max_new: int = 16
+    sampling: Optional[SamplingParams] = None   # None = greedy
     out: List[int] = field(default_factory=list)
     done: bool = False
 
@@ -157,6 +186,7 @@ class Request:
 class _Slot:
     req: Optional[Request] = None
     pos: int = 0                  # next position to write
+    prefill_cursor: int = 0       # prompt-feed tokens already prefilled
 
 
 class ServeEngine:
@@ -175,13 +205,26 @@ class ServeEngine:
                  max_seq: int = 256, dtype=jnp.float32,
                  exec_cfg: Optional[ops.ExecConfig] = None,
                  verify_plan: bool = True, fused: bool = True,
-                 decode_block: int = 16, donate_state: bool = True):
+                 decode_block: int = 16, donate_state: bool = True,
+                 eos_id: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.exec_cfg = exec_cfg
         self.fused = fused
         self.decode_block = decode_block
         self.donate_state = donate_state
+        # on-device stop token: a slot emitting eos_id goes inactive inside
+        # the scanned block (None disables — budgets alone size requests)
+        self.eos_id = eos_id
+        # chunked prefill: feed admitted prompts in fixed-size chunks
+        # interleaved with decode blocks, so a long prompt never stalls
+        # live decodes (None = whole-prompt prefill in one call)
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+        self._prefill_rr = 0          # round-robin over mid-prefill slots
         self.state = model_lib.init_decode_state(cfg, n_slots, max_seq,
                                                  dtype=dtype)
         self.slots = [_Slot() for _ in range(n_slots)]
@@ -228,23 +271,62 @@ class ServeEngine:
         """
         cfg = self.cfg
         donate = (1,) if self.donate_state else ()
+        eos_id = self.eos_id
 
-        def decode_fn(p, t, s, pos):
-            return model_lib.decode_step(p, cfg, t, s, pos)
+        def decode_fn(p, t, s, pos, live):
+            # the oracle step masks state commits to live rows exactly like
+            # the fused block does — done/mid-prefill rows stop writing
+            # cache on both paths, and popcounts see live rows only
+            return model_lib.masked_decode_step(p, cfg, t, s, pos, live)
 
-        def decode_many_fn(p, s, toks, pos, live, n_steps):
-            return model_lib.decode_many(p, cfg, toks, s, pos, live, n_steps)
+        def decode_many_fn(p, s, toks, pos, live, rem, temp, top_k, seeds,
+                           n_steps):
+            return model_lib.decode_many(p, cfg, toks, s, pos, live, n_steps,
+                                         rem=rem, eos_id=eos_id, temp=temp,
+                                         top_k=top_k, seeds=seeds)
 
-        def prefill_fn(p, s, toks, valid, slot, slot_pos):
+        def prefill_fn(p, s, toks, valid, slot, slot_pos, start, reset):
             return model_lib.prefill_into_slot(p, cfg, toks, valid, slot, s,
-                                               slot_pos)
+                                               slot_pos, start, reset)
 
         self._decode = jax.jit(self._scoped(decode_fn))
         self._decode_many = jax.jit(self._scoped(decode_many_fn),
-                                    static_argnums=(5,),
+                                    static_argnums=(9,),
                                     donate_argnums=donate)
         self._prefill = jax.jit(self._scoped(prefill_fn),
                                 donate_argnums=donate)
+        # stale-trace hygiene: the mask cache holds device arrays handed to
+        # the retired executables — clear every per-engine cache alongside
+        # the rebuild so nothing compiled against the old table survives
+        self._mask_cache.clear()
+
+    def warmup(self):
+        """Precompile every executable shape the serving loop can dispatch,
+        so no compile stall lands inside live traffic: each power-of-two
+        fused block length up to ``decode_block``, each power-of-two
+        prefill segment length (up to ``prefill_chunk``, or ``max_seq``
+        for whole-prompt prefill), and the per-token oracle step.  All
+        dispatches run with every row masked inactive, so decode state is
+        untouched (the donated calls re-thread it in place)."""
+        zero = np.zeros((self.n_slots,), np.int32)
+        dead = np.zeros((self.n_slots,), bool)
+        t = 1
+        while t <= self.decode_block:
+            _, self.state, *_ = self._decode_many(
+                self._exec_params, self.state, zero, zero, dead, zero,
+                None, None, None, t)
+            t *= 2
+        self._decode(self._exec_params, zero[:, None], self.state, zero,
+                     dead)
+        cap = _next_pow2(self.prefill_chunk or self.max_seq)
+        p = 1
+        while p <= cap:
+            self.state = self._prefill(
+                self._exec_params, self.state, np.zeros((p,), np.int32),
+                np.zeros((p,), bool), np.int32(0), zero, np.int32(1),
+                False)
+            p *= 2
+        jax.block_until_ready(self.state)
 
     # ---- density feedback ----
     def activation_densities(self) -> Dict[str, float]:
@@ -255,9 +337,11 @@ class ServeEngine:
         scanned step per site, so a T-step block accumulates the same
         window as T oracle steps.
 
-        Popcounts aggregate over the whole decode batch, including idle
-        slots (which carry token-0 filler rows) — calibrate from a busy
-        engine, or treat low-occupancy measurements as approximate."""
+        Popcount accumulation is masked to *active* rows (the mask
+        ``masked_decode_step`` installs via ``ops.active_rows``): idle
+        slots' token-0 filler rows and mid-prefill filler rows don't skew
+        the measurement, so a 1-live-of-N engine measures the same density
+        as a 1-slot engine."""
         if self._stats is None:
             return {}
         jax.effects_barrier()        # flush in-flight debug callbacks
@@ -357,10 +441,28 @@ class ServeEngine:
         return measured
 
     # ---- request management ----
-    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               sampling: Optional[SamplingParams] = None) -> int:
+        """Queue a request; returns its uid.
+
+        Admission edge cases are rejected *here*, not deep in the decode
+        loop: an empty prompt has no current token to decode from, and a
+        prompt needing more cache positions than ``max_seq`` would make the
+        prefill scatter write out-of-range positions that jit silently
+        clamps — corrupted KV state instead of an error."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(
+                f"prompt must be a non-empty 1-D token array, got shape "
+                f"{prompt.shape}")
+        if len(prompt) + 1 > self.max_seq:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens needs {len(prompt) + 1} "
+                f"cache positions (prompt + first generated token) but "
+                f"max_seq={self.max_seq}")
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new=max_new))
+        self.queue.append(Request(self._uid, prompt, max_new=max_new,
+                                  sampling=sampling))
         return self._uid
 
     def _free_slots(self) -> List[int]:
@@ -370,40 +472,92 @@ class ServeEngine:
     def _slot_positions(self) -> np.ndarray:
         return np.asarray([s.pos for s in self.slots], np.int32)
 
-    def _admit(self):
-        """Prefill queued requests into free slots — one fused jitted call
-        per admitted request (``models.model.prefill_into_slot``): the whole
-        prompt feed scans on-device with slot masking, so host dispatch is
-        O(1) per request instead of O(prompt_len).
+    @staticmethod
+    def _feed_len(req: Request) -> int:
+        """Prompt-feed length: ``prompt[:-1]`` (the last prompt token is the
+        first decode input).  0 for a length-1 prompt — a prefill-free
+        admit whose only prefill work is the slot zero-reset."""
+        return len(req.prompt) - 1
 
-        Slot masking merges state **only at the admitted row on valid
-        steps** — live slots keep their rows bit-untouched (every per-layer
-        state leaf carries batch at axis 1: (L, B, ...)), and the admitted
-        row is zero-reset so recurrent families never inherit the previous
-        occupant's state.  Feeds are padded to power-of-two lengths; padding
-        steps are fully masked, bounding traces at O(log max_seq)."""
+    def _feed_prefill(self, i: int, start: int, count: int):
+        """Feed ``count`` prompt-feed tokens from ``start`` into slot ``i``
+        — one fused jitted call (``models.model.prefill_into_slot``): the
+        segment scans on-device with slot masking, so host dispatch is O(1)
+        per segment instead of O(segment_len).
+
+        Slot masking merges state **only at the fed row on valid steps** —
+        live slots keep their rows bit-untouched (every per-layer state
+        leaf carries batch at axis 1: (L, B, ...)), and on the first
+        segment (``start == 0``) the row is zero-reset so recurrent
+        families never inherit the previous occupant's state.  Segments are
+        padded to power-of-two lengths; padding steps are fully masked,
+        bounding traces at O(log max_seq)."""
+        s = self.slots[i]
+        feed = np.asarray(s.req.prompt[:-1], np.int32)
+        seg = feed[start:start + count]
+        padded = _next_pow2(max(len(seg), 1))
+        toks = np.zeros((padded,), np.int32)
+        toks[:len(seg)] = seg
+        valid = np.arange(padded) < len(seg)
+        self.state = self._prefill(self._exec_params, self.state,
+                                   toks, valid, np.int32(i),
+                                   self._slot_positions(),
+                                   np.int32(start), start == 0)
+        s.prefill_cursor = start + len(seg)
+        s.pos = s.prefill_cursor
+
+    def _admit(self):
+        """Move queued requests into free slots.  Short prompts (feed fits
+        one chunk, or ``prefill_chunk`` unset) prefill whole at admit;
+        longer prompts feed their first chunk now (the zero-reset rides on
+        it) and the rest via ``_advance_prefill`` interleaved with decode
+        blocks, so a long prompt never stalls live decodes."""
         admitted = False
         for i in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.popleft()
-            self.slots[i] = _Slot(req=req, pos=0)
-            feed = np.asarray(req.prompt[:-1], np.int32)
-            padded = _next_pow2(max(len(feed), 1))
-            toks = np.zeros((padded,), np.int32)
-            toks[:len(feed)] = feed
-            valid = np.arange(padded) < len(feed)
-            self.state = self._prefill(self._exec_params, self.state,
-                                       toks, valid, np.int32(i),
-                                       self._slot_positions())
-            self.slots[i].pos = max(len(req.prompt) - 1, 0)
+            self.slots[i] = _Slot(req=req, pos=0, prefill_cursor=0)
+            feed_len = self._feed_len(req)
+            count = (feed_len if self.prefill_chunk is None
+                     else min(feed_len, self.prefill_chunk))
+            # feed_len == 0 (length-1 prompt): the call runs one fully
+            # masked step whose only effect is the slot-row zero-reset
+            self._feed_prefill(i, 0, count)
             admitted = True
         return admitted
 
+    def _prefilling(self) -> List[int]:
+        """Slots whose prompt feed is not fully prefilled yet (they ride
+        decode blocks as masked filler rows until their last chunk lands).
+        """
+        return [i for i, s in enumerate(self.slots)
+                if s.req is not None and not s.req.done
+                and s.prefill_cursor < self._feed_len(s.req)]
+
+    def _advance_prefill(self) -> bool:
+        """Feed one pending prefill chunk (round-robin over mid-prefill
+        slots) — the prefill half of the chunked-prefill / decode-block
+        interleave.  Returns True when a chunk was fed."""
+        pend = self._prefilling()
+        if not pend:
+            return False
+        i = pend[self._prefill_rr % len(pend)]
+        self._prefill_rr += 1
+        s = self.slots[i]
+        count = (self._feed_len(s.req) - s.prefill_cursor
+                 if self.prefill_chunk is None else self.prefill_chunk)
+        self._feed_prefill(i, s.prefill_cursor, count)
+        return True
+
     # ---- decode ----
     def _live(self) -> List[int]:
+        """Decode-ready slots: occupied, not done, prompt fully prefilled
+        (mid-prefill slots stay masked out of decode until their last
+        chunk)."""
         return [i for i, s in enumerate(self.slots)
-                if s.req is not None and not s.req.done]
+                if s.req is not None and not s.req.done
+                and s.prefill_cursor >= self._feed_len(s.req)]
 
     def _live_mask(self, live: List[int]) -> jax.Array:
         """Device-resident (n_slots,) bool mask for ``live`` (cached per
@@ -423,74 +577,127 @@ class ServeEngine:
             toks[i] = hist[s.pos] if s.pos < len(hist) else hist[-1]
         return toks
 
+    def _finish_check(self, s: _Slot):
+        """Request-completion policy, shared by the oracle and fused paths:
+        done on EOS, on budget exhaustion, or on hitting the ``max_seq - 1``
+        sequence wall (marked done, never silently truncated — the request
+        keeps everything it generated)."""
+        r = s.req
+        if (self.eos_id is not None and r.out and r.out[-1] == self.eos_id) \
+                or len(r.out) >= r.max_new or s.pos >= self.max_seq - 1:
+            r.done = True
+
     def _append_token(self, i: int, tok: int, out: Dict[int, int]):
         s = self.slots[i]
         s.req.out.append(tok)
         s.pos += 1
         out[s.req.uid] = tok
-        if len(s.req.out) >= s.req.max_new or s.pos >= self.max_seq - 1:
-            s.req.done = True
+        self._finish_check(s)
 
     def _append_block(self, live: List[int], block: np.ndarray,
                       t_block: int) -> Dict[int, List[int]]:
         """Credit a synced (T, n_slots) token block to its requests.
 
-        ``_block_len`` guarantees no live slot's budget is shorter than
-        ``t_block``, so every live slot takes the whole column — the
-        done-flag check after extending matches per-token semantics
-        exactly."""
+        A slot that went inactive mid-block (EOS hit, or ``rem`` budget
+        drained) emits the -1 sentinel for its remaining steps — its column
+        is truncated at the sentinel, so the slot is credited exactly the
+        tokens the per-token oracle would have produced before stopping."""
         out: Dict[int, List[int]] = {}
         for i in live:
             s = self.slots[i]
             toks_i = block[:t_block, i].tolist()
+            if -1 in toks_i:
+                toks_i = toks_i[:toks_i.index(-1)]
             s.req.out.extend(toks_i)
-            s.pos += t_block
+            s.pos += len(toks_i)
             out[s.req.uid] = toks_i
-            if len(s.req.out) >= s.req.max_new or s.pos >= self.max_seq - 1:
-                s.req.done = True
+            self._finish_check(s)
         return out
+
+    def _sampling_arrays(self, live: List[int]):
+        """Per-slot (temperature, top_k, seed) arrays for a decode dispatch,
+        or ``None`` when every live slot is greedy — the all-greedy path
+        then omits the sampling operands entirely (a distinct, cheaper jit
+        trace with no PRNG work), preserving the pre-sampling executables
+        bit-for-bit."""
+        if all(self.slots[i].req.sampling is None
+               or self.slots[i].req.sampling.temperature <= 0
+               for i in live):
+            return None
+        temp = np.zeros((self.n_slots,), np.float32)
+        topk = np.zeros((self.n_slots,), np.int32)
+        seeds = np.zeros((self.n_slots,), np.int32)
+        for i in live:
+            sp = self.slots[i].req.sampling
+            if sp is not None:
+                temp[i] = sp.temperature
+                topk[i] = sp.top_k
+                seeds[i] = sp.seed
+        return temp, topk, seeds
 
     def step(self) -> Dict[int, int]:
         """One decode step for every live slot; returns {uid: new_token}.
 
         The per-token reference oracle: a fused T-block is computation-
         identical to T of these steps (same per-slot position vectors, same
-        token-0 filler rows for dead slots).  The host syncs the logits and
-        runs argmax here — the cost the fused loop amortizes away.
+        token-0 filler rows for dead slots, same masked state commits, same
+        position-keyed sampling).  The host syncs the logits and picks the
+        token here — the cost the fused loop amortizes away.
         """
         self._admit()
+        self._advance_prefill()
         live = self._live()
         if not live:
             return {}
         toks = self._current_tokens(live)[:, None]
+        pos = self._slot_positions()
         logits, self.state = self._decode(
-            self._exec_params, toks, self.state, self._slot_positions())
+            self._exec_params, toks, self.state, pos,
+            self._live_mask(live))
+        samp = self._sampling_arrays(live)
+        if samp is None:
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        else:
+            temp, topk, seeds = samp
+            nxt = np.asarray(model_lib.sample_tokens(
+                logits[:, 0, :], jnp.asarray(temp), jnp.asarray(topk),
+                jnp.asarray(seeds), jnp.asarray(pos)))
         out: Dict[int, int] = {}
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
         for i in live:
             self._append_token(i, int(nxt[i]), out)
         return out
 
     def _block_len(self, live: List[int], budget: int) -> int:
-        """Fused block length: min live-slot remaining (request budget and
-        sequence room), clamped to [1, budget] — no slot ever overshoots
-        its request, so a block is exactly T oracle steps and a freed slot
-        re-admits at the block boundary (the same step the oracle would
-        admit it).
+        """Fused block length: *max* live-slot remaining (request budget
+        and sequence room), clamped to [1, budget].  One short request no
+        longer shrinks everyone's block — the device-side ``rem`` budget
+        carried through ``decode_many`` stops each row exactly at its own
+        limit (emitting the -1 sentinel thereafter), so overshoot is
+        impossible even when the block outlives a slot.
 
         The length is rounded *down* to a power of two: ``n_steps`` is a
         static jit argument (the scan length), so each distinct value is a
         full retrace+compile of the T-step executable — quantizing bounds
         the compile count at O(log decode_block), the same trick as the
-        pow2-padded prefill feeds.  Rounding down keeps the no-overshoot
-        invariant (a request just drains in a couple of shorter tail
-        blocks)."""
-        rem = min(
+        pow2-padded prefill feeds."""
+        rem = max(
             max(min(s.req.max_new - len(s.req.out),
                     (self.max_seq - 1) - s.pos), 1)
             for s in (self.slots[i] for i in live))
         t = max(1, min(rem, budget))
         return 1 << (t.bit_length() - 1)       # largest pow2 <= t
+
+    def _slot_budgets(self, live: List[int]) -> np.ndarray:
+        """Per-slot device budget: steps each row may still take (request
+        budget and sequence room); 0 for dead rows.  ``decode_many``
+        decrements it in the scan and goes inactive at 0 — the device-side
+        half of the no-overshoot invariant."""
+        rem = np.zeros((self.n_slots,), np.int32)
+        for i in live:
+            s = self.slots[i]
+            rem[i] = max(min(s.req.max_new - len(s.req.out),
+                             (self.max_seq - 1) - s.pos), 0)
+        return rem
 
     def _run_block(self, live: List[int], t_block: int, toks_in, pos_in
                    ) -> tuple:
@@ -501,21 +708,25 @@ class ServeEngine:
         (device-resident carries).  Returns ({uid: [tokens]}, token carry,
         pos carry) — the carries feed the next block device-to-device when
         occupancy is unchanged."""
-        block, self.state, dev_tok, dev_pos = self._decode_many(
+        samp = self._sampling_arrays(live)
+        temp, topk, seeds = samp if samp is not None else (None, None, None)
+        block, self.state, dev_tok, dev_pos, _ = self._decode_many(
             self._exec_params, self.state, toks_in, pos_in,
-            self._live_mask(live), t_block)
+            self._live_mask(live), self._slot_budgets(live),
+            temp, topk, seeds, t_block)
         block = np.asarray(block)            # (T, n_slots): ONE host sync
         return self._append_block(live, block, t_block), dev_tok, dev_pos
 
     def decode_block_step(self, n_steps: Optional[int] = None
                           ) -> Dict[int, List[int]]:
-        """One fused block: admit, decode T steps on-device, sync the (T,
-        n_slots) token block once.  Returns {uid: [tokens]} for live slots.
-        ``n_steps`` caps the block (default ``decode_block``); the min
-        live-slot remaining budget still bounds it, so no request
-        overshoots.
+        """One fused block: admit, feed one pending prefill chunk, decode T
+        steps on-device, sync the (T, n_slots) token block once.  Returns
+        {uid: [tokens]} for live slots.  ``n_steps`` caps the block
+        (default ``decode_block``); per-slot device budgets stop each row
+        at its own limit, so no request overshoots.
         """
         self._admit()
+        self._advance_prefill()
         live = self._live()
         if not live:
             return {}
@@ -534,7 +745,9 @@ class ServeEngine:
     def run_until_drained(self, max_steps: int = 1024) -> Dict[int, List[int]]:
         """Serve until queue and slots drain (or ``max_steps`` decode
         steps).  ``fused=True`` drives ``decode_many`` blocks — host work
-        per block is one dispatch and one token-block sync; ``fused=False``
+        per block is one dispatch and one token-block sync; each iteration
+        also feeds one pending prefill chunk, so long prompts admit across
+        several blocks instead of stalling live decodes.  ``fused=False``
         is the per-token oracle loop."""
         if not self.fused:
             return self._run_per_token(max_steps)
@@ -543,7 +756,9 @@ class ServeEngine:
         # device-resident block carries: while the live set is unchanged,
         # decode_many's (token, pos) outputs ARE the next block's inputs —
         # blocks chain device-to-device and the only per-block host↔device
-        # traffic is the (T, n_slots) token-block sync
+        # traffic is the (T, n_slots) token-block sync.  A prefill chunk
+        # feeding a *different* (masked-out) slot leaves the carries valid;
+        # any live-set change rebuilds them from host state.
         dev_tok = dev_pos = None
         live_key: Optional[List[int]] = None
         while steps < max_steps:
@@ -552,8 +767,15 @@ class ServeEngine:
             # made outside this drain)
             self._collect(results)
             admitted = self._admit()
+            fed = self._advance_prefill()
             live = self._live()
             if not live:
+                if fed or self._prefilling():
+                    # prefill-only iteration: chunks are still landing but
+                    # nothing decodes yet — count one step so a stuck
+                    # prefill cannot loop forever
+                    steps += 1
+                    continue
                 self._collect(results)
                 break
             t_block = self._block_len(
@@ -568,8 +790,9 @@ class ServeEngine:
                                                   pos_in)
             steps += t_block
             self._collect(results)
-            if not self.queue and all(s.req is None or s.req.done
-                                      for s in self.slots):
+            if not self.queue and not self._prefilling() \
+                    and all(s.req is None or s.req.done
+                            for s in self.slots):
                 break
         return results
 
