@@ -15,14 +15,18 @@ For each sparsity profile this measures, on CPU:
     the same dispatch; ``engine_moe`` in the report),
   * **serve throughput** — the fused hot loop (``decode_many`` blocks +
     batched prefill + donated state) vs the per-token oracle loop on
-    drain-a-queue engine profiles: tokens/sec, speedup, and the
-    host-overhead fraction (wall − device time) per path.  The fused and
-    per-token token streams are asserted identical,
+    drain-a-queue engine profiles, with the fused loop measured both
+    sync and under **async double-buffered dispatch** (block k+1
+    dispatched from device carries before block k's token sync):
+    tokens/sec, speedup, and the host-overhead fraction (wall − device
+    time) per path.  All three token streams are asserted identical,
   * **serve load generator** — continuous batching under Poisson arrivals
-    with mixed prompt/output lengths: p50/p99 time-to-first-token and
-    tokens/sec-per-slot with chunked prefill on vs the stall-on-prefill
-    baseline, with the chunked greedy stream asserted token-for-token
-    equal to the per-token oracle (``serve_load`` in the report),
+    with mixed prompt/output lengths across the policy/dispatch matrix
+    (stall / chunked_sync / chunked-async / chunked_small /
+    adaptive-admission): p50/p99 time-to-first-token and
+    tokens/sec-per-slot, with the async greedy streams asserted
+    token-for-token equal to the per-token oracle (``serve_load`` in the
+    report),
   * **modeled energy + cycles** — the paper's own evaluation framework
     (``core.energy_model``) on the equivalent layer, per sparsity variant,
   * **modeled HBM traffic / roofline time** — the TPU-native schedule
@@ -58,7 +62,8 @@ from repro.core.sparsity import (build_block_sparse_meta, plan_weight,
                                  zvc_compressed_bytes)
 from repro.kernels import ops
 from repro.models import model as model_lib
-from repro.serve.engine import ServeEngine, decode_exec_config
+from repro.serve.engine import (AdaptiveAdmission, ServeEngine,
+                                decode_exec_config)
 
 PROFILES = {
     # name: (weight_sparsity, activation_threshold, expected act_density)
@@ -270,7 +275,7 @@ def _drain_tps(eng, prompts, max_new: int) -> tuple:
 
 
 def bench_serve_throughput(name: str, spec: dict, wt_sparsity: float,
-                           repeats: int = 3) -> Dict[str, object]:
+                           repeats: int = 5) -> Dict[str, object]:
     """Fused ``decode_many`` loop vs the per-token oracle loop on one
     engine profile: tokens/sec, speedup, host-overhead fraction, and a
     token-stream identity check (the fused block must be the oracle's
@@ -296,15 +301,26 @@ def bench_serve_throughput(name: str, spec: dict, wt_sparsity: float,
 
     tps: Dict[str, float] = {}
     results: Dict[str, list] = {}
-    for label, fused in (("per_token", False), ("fused", True)):
-        eng = ServeEngine(cfg, params, fused=fused, **kw)
+    engines = {}
+    for label, ekw in (("per_token", dict(fused=False)),
+                       ("fused", dict(fused=True, async_dispatch=False)),
+                       ("fused_async", dict(fused=True,
+                                            async_dispatch=True))):
+        eng = ServeEngine(cfg, params, **ekw, **kw)
         _drain_tps(eng, prompts, spec["max_new"])      # warm identical wave
-        best = 0.0
-        for _ in range(repeats):
+        engines[label] = eng
+    # interleave the timed repeats round-robin across the engines so a
+    # slow machine phase degrades every path's best-of equally — the
+    # sync/async comparison is a few-percent margin that a sequential
+    # per-engine loop lets drift flip
+    for _ in range(repeats):
+        for label, eng in engines.items():
             t, res = _drain_tps(eng, prompts, spec["max_new"])
-            best = max(best, t)
-        tps[label], results[label] = best, res
-    assert results["per_token"] == results["fused"], \
+            if t > tps.get(label, 0.0):
+                tps[label] = t
+            results[label] = res
+    assert results["per_token"] == results["fused"] \
+        == results["fused_async"], \
         f"{name}: fused tokens diverged from the per-token oracle"
 
     # device-time estimate from an undonated twin (donated buffers can't be
@@ -329,6 +345,8 @@ def bench_serve_throughput(name: str, spec: dict, wt_sparsity: float,
     host_frac = {
         "per_token": max(0.0, 1.0 - dev_tok * tps["per_token"] / n_slots),
         "fused": max(0.0, 1.0 - dev_fused * tps["fused"] / n_slots),
+        "fused_async": max(0.0, 1.0 - dev_fused * tps["fused_async"]
+                           / n_slots),
     }
     return {
         "arch": cfg.name, "planned": bool(spec.get("planned")),
@@ -336,6 +354,7 @@ def bench_serve_throughput(name: str, spec: dict, wt_sparsity: float,
         "max_new": spec["max_new"], "n_requests": spec["n_req"],
         "tokens_per_s": tps,
         "speedup": tps["fused"] / tps["per_token"],
+        "speedup_async": tps["fused_async"] / tps["per_token"],
         "device_s_per_token": {"per_token": dev_tok / n_slots,
                                "fused": dev_fused / n_slots},
         "host_overhead_fraction": host_frac,
@@ -409,15 +428,18 @@ def _run_traffic(eng, workload) -> Dict[str, object]:
     time-to-first-token against the arrival time."""
     t0 = time.perf_counter()
     arrive, first_tok, n_toks = {}, {}, {}
-    idx, outstanding = 0, set()
+    idx, reqs = 0, {}
     ticks = []
-    while idx < len(workload) or outstanding:
+    while idx < len(workload) or any(not r.done for r in reqs.values()):
         now = time.perf_counter() - t0
         while idx < len(workload) and workload[idx][0] <= now:
             arr, prompt, max_new = workload[idx]
             uid = eng.submit(prompt, max_new=max_new)
             arrive[uid] = now
-            outstanding.add(uid)
+            # hold the Request object: under async dispatch a request can
+            # finish AND have its slot recycled within one tick, so a slot
+            # scan would never observe its done flag
+            reqs[uid] = eng.queue[-1]
             idx += 1
         tick0 = time.perf_counter()
         out = eng.decode_block_step()
@@ -427,11 +449,16 @@ def _run_traffic(eng, workload) -> Dict[str, object]:
             if toks and uid not in first_tok:
                 first_tok[uid] = now
             n_toks.setdefault(uid, []).extend(toks)
-        for s in eng.slots:
-            if s.req is not None and s.req.done:
-                outstanding.discard(s.req.uid)
-        if not out and not eng._prefilling() and idx < len(workload):
+        if not out and not eng._prefilling() and not eng._inflight \
+                and idx < len(workload):
             time.sleep(0.0005)      # truly idle: wait for the next arrival
+    # async engines may exit with a final deferred block — credit it
+    tail = eng.flush()
+    now = time.perf_counter() - t0
+    for uid, toks in tail.items():
+        if toks and uid not in first_tok:
+            first_tok[uid] = now
+        n_toks.setdefault(uid, []).extend(toks)
     wall = time.perf_counter() - t0
     ttft = [first_tok[u] - arrive[u] for u in arrive]
     total = sum(len(v) for v in n_toks.values())
@@ -448,21 +475,39 @@ def _run_traffic(eng, workload) -> Dict[str, object]:
     }
 
 
-def bench_serve_loadgen(quick: bool = False, seed: int = 0
-                        ) -> Dict[str, object]:
+def bench_serve_loadgen(quick: bool = False, seed: int = 0,
+                        repeats: int = 4) -> Dict[str, object]:
     """Continuous batching under real traffic: Poisson arrivals with mixed
-    prompt/output lengths on the edge-tiny engine, chunked prefill on vs
-    off (the stall-on-prefill baseline), plus a drained per-token oracle
-    run asserting the greedy fused trace stayed token-for-token exact.
+    prompt/output lengths on the edge-tiny engine, across the policy /
+    dispatch matrix — ``stall`` (whole-prompt prefill, sync dispatch: the
+    PR-5 baseline), ``chunked_sync`` (fixed 128-token chunks, sync: the
+    PR-6 engine), ``chunked`` (same policy under async double-buffered
+    dispatch), ``chunked_small`` (fixed 32-token chunks, async) and
+    ``adaptive`` (``AdaptiveAdmission``: occupancy-scaled 32..128 chunks +
+    shortest-prompt-first under burst, async).  A drained per-token oracle
+    run asserts the async greedy traces stayed token-for-token exact.
 
-    The structural claim: with chunking, a long prompt admits across many
-    ticks (one chunk interleaved per decode block), so a short request
-    arriving behind it gets its first block within a couple of tick times
-    — the stall baseline serializes every queued request behind the whole
-    prompt scan, which is what its p99 TTFT measures."""
+    The structural claims: chunking bounds the prefill stall a queued
+    request inherits (chunked vs stall); async dispatch takes the
+    token-sync + host accounting off every tick's critical path (chunked
+    vs chunked_sync); and a *fixed* chunk faces a dilemma adaptive
+    dissolves.  A fixed chunk must pick one size: 32 is the
+    decode-friendly choice (a live request's next block is never held up
+    by more than one small feed), but at the idle-slot burst head it
+    splinters each long prompt into 4× the feeds, each gap conceding the
+    tick to other work, so the burst's last prompt finishes its prefill
+    tens of milliseconds late; 128 clears bursts quickly but holds live
+    decodes behind a 4×-longer feed.  ``AdaptiveAdmission`` sizes the
+    chunk by live-decode occupancy — 128 into idle slots, shrinking to 32
+    as decode heats up — so it matches the burst behaviour of the large
+    chunk and the decode behaviour of the small one (adaptive vs
+    chunked_small, the decode-friendly fixed baseline).  Each
+    configuration replays the identical workload ``repeats`` times and
+    reports its best (min-p99) trace, damping scheduler jitter."""
     cfg = _edge_tiny_config()
     kw = dict(n_slots=4, max_seq=256, decode_block=8, eos_id=7)
     chunk = 128
+    small = 32
     workload = _make_workload(cfg, quick, seed)
     is_long = [len(p) >= 64 for _, p, _ in workload]
     params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
@@ -472,15 +517,27 @@ def bench_serve_loadgen(quick: bool = False, seed: int = 0
         "prompt_lens": sorted({len(p) for _, p, _ in workload}),
         **{k: v for k, v in kw.items() if k != "eos_id"},
         "eos_id": kw["eos_id"], "prefill_chunk": chunk,
+        "prefill_chunk_small": small,
     }
+    configs = (
+        ("stall", dict(prefill_chunk=None, async_dispatch=False)),
+        ("chunked_sync", dict(prefill_chunk=chunk, async_dispatch=False)),
+        ("chunked", dict(prefill_chunk=chunk)),
+        ("chunked_small", dict(prefill_chunk=small)),
+        ("adaptive", dict(prefill_chunk=small,
+                          admission=AdaptiveAdmission(
+                              min_chunk=small, max_chunk=chunk,
+                              burst_depth=4))),
+    )
     traces = {}
-    for label, pc in (("chunked", chunk), ("stall", None)):
-        eng = ServeEngine(cfg, params, fused=True, prefill_chunk=pc, **kw)
+    for label, ekw in configs:
+        eng = ServeEngine(cfg, params, fused=True, **ekw, **kw)
         # compile every dispatchable shape off the clock — the jitted
         # entry points are per-engine closures, so this must run on the
         # measured engine itself
         eng.warmup()
-        tr = _run_traffic(eng, workload)
+        tr = min((_run_traffic(eng, workload) for _ in range(repeats)),
+                 key=lambda t: t["ttft_p99_s"])
         traces[label] = tr
         short = [t for t, lg in zip(tr["ttft_s"], is_long) if not lg]
         long_ = [t for t, lg in zip(tr["ttft_s"], is_long) if lg]
@@ -488,15 +545,17 @@ def bench_serve_loadgen(quick: bool = False, seed: int = 0
                       if k not in ("tokens", "ttft_s")}
         out[label]["ttft_short_p99_s"] = float(np.percentile(short, 99))
         out[label]["ttft_long_max_s"] = float(max(long_))
-    # greedy correctness under traffic: the chunked fused engine must emit
-    # exactly the per-token oracle's tokens (arrival timing reorders the
-    # schedule, never the math — masked state commits keep slots
-    # independent)
+    # greedy correctness under traffic: the async fused engines must emit
+    # exactly the per-token oracle's tokens (arrival timing and admission
+    # policy reorder the schedule, never the math — masked state commits
+    # keep slots independent and deferred blocks are always token-exact)
     oracle = ServeEngine(cfg, params, fused=False, **kw)
     uids = [oracle.submit(p, max_new=mn) for _, p, mn in workload]
     res = oracle.run_until_drained(max_steps=1 << 14)
     oracle_toks = [res[u] for u in uids]
     out["tokens_match_oracle"] = traces["chunked"]["tokens"] == oracle_toks
+    out["adaptive_tokens_match_oracle"] = (
+        traces["adaptive"]["tokens"] == oracle_toks)
     if not out["tokens_match_oracle"]:
         out["mismatch"] = {"chunked": traces["chunked"]["tokens"],
                            "oracle": oracle_toks}
@@ -532,9 +591,12 @@ def run(out_path: str, verbose: bool = True,
                   f"{', planned' if s['planned'] else ''}): "
                   f"per_token={tp['per_token']:.0f} tok/s "
                   f"fused={tp['fused']:.0f} tok/s "
-                  f"speedup={s['speedup']:.2f}x  host_frac "
+                  f"async={tp['fused_async']:.0f} tok/s "
+                  f"speedup={s['speedup']:.2f}x/"
+                  f"{s['speedup_async']:.2f}x  host_frac "
                   f"pt={s['host_overhead_fraction']['per_token']:.2f} "
-                  f"fused={s['host_overhead_fraction']['fused']:.2f}")
+                  f"fused={s['host_overhead_fraction']['fused']:.2f} "
+                  f"async={s['host_overhead_fraction']['fused_async']:.2f}")
     serve["recalibration"] = bench_recalibration_after_fused(wt_sp)
     report["serve_throughput"] = serve
     if verbose:
@@ -549,15 +611,18 @@ def run(out_path: str, verbose: bool = True,
     lg = bench_serve_loadgen(quick=quick)
     report["serve_load"] = lg
     if verbose:
-        for label in ("chunked", "stall"):
+        for label in ("stall", "chunked_sync", "chunked", "chunked_small",
+                      "adaptive"):
             t = lg[label]
-            print(f"loadgen[{label}]: ttft p50={t['ttft_p50_s']*1e3:.1f} ms "
+            print(f"loadgen[{label:12s}]: "
+                  f"ttft p50={t['ttft_p50_s']*1e3:.1f} ms "
                   f"p99={t['ttft_p99_s']*1e3:.1f} ms  "
                   f"{t['tokens_per_s_per_slot']:.0f} tok/s/slot  "
                   f"tick p50={t['tick_p50_s']*1e3:.1f} ms "
                   f"max={t['tick_max_s']*1e3:.1f} ms")
         print(f"loadgen: chunked tokens == oracle: "
-              f"{lg['tokens_match_oracle']}")
+              f"{lg['tokens_match_oracle']}, adaptive == oracle: "
+              f"{lg['adaptive_tokens_match_oracle']}")
     for name, prof in profiles.items():
         site = bench_site(prof, **site_kw)
         eng = bench_engine(prof, n_steps=n_steps)
@@ -624,6 +689,23 @@ def validate(report: Dict[str, object]) -> list:
             and rc.get("served_after_recalibrate")):
         failures.append("popcount feedback / maybe_recalibrate broken "
                         "after a fused run")
+    # async dispatch must take host accounting off the critical path where
+    # it dominates: on edge_tiny the async host-overhead fraction must
+    # beat the sync fused engine's.  The bound carries a small tolerance:
+    # on a single-core runner host accounting and device compute timeslice
+    # one CPU, so the overlap win collapses to the serial work async skips
+    # (relaunching from device carries instead of host-rebuilt inputs,
+    # ~3%) and the comparison sits inside the timer's noise band (~±0.02
+    # on the hf estimate even with interleaved best-of repeats); where a
+    # spare core exists the reduction is strict and the tolerance is slack
+    et = serve.get("edge_tiny", {})
+    hf = et.get("host_overhead_fraction", {})
+    if not (hf.get("fused_async", float("inf"))
+            < hf.get("fused", 0.0) + 0.03):
+        failures.append(
+            f"edge_tiny: async dispatch did not reduce the host-overhead "
+            f"fraction (async={hf.get('fused_async')} vs "
+            f"sync={hf.get('fused')}, tolerance 0.03)")
     lg = report.get("serve_load", {})
     if not lg:
         failures.append("no load-generator section in the report")
@@ -631,12 +713,32 @@ def validate(report: Dict[str, object]) -> list:
         if not lg.get("tokens_match_oracle"):
             failures.append("loadgen: chunked fused tokens diverged from "
                             "the per-token oracle")
-        p99_c = lg.get("chunked", {}).get("ttft_p99_s", float("inf"))
-        p99_s = lg.get("stall", {}).get("ttft_p99_s", 0.0)
-        if not p99_c < p99_s:
+        if not lg.get("adaptive_tokens_match_oracle"):
+            failures.append("loadgen: adaptive-admission tokens diverged "
+                            "from the per-token oracle")
+        p99 = {lab: lg.get(lab, {}).get("ttft_p99_s", float("inf"))
+               for lab in ("stall", "chunked_sync", "chunked",
+                           "chunked_small", "adaptive")}
+        if not p99["chunked"] < p99["stall"]:
             failures.append(
                 f"loadgen: chunked prefill did not improve p99 TTFT "
-                f"(chunked={p99_c:.4f}s vs stall={p99_s:.4f}s)")
+                f"(chunked={p99['chunked']:.4f}s vs "
+                f"stall={p99['stall']:.4f}s)")
+        # async vs sync is a designed tie on TTFT: every TTFT-critical tick
+        # syncs its block anyway (first-token urgency), so async buys
+        # throughput (host_overhead_fraction above) at *no* latency — the
+        # check is a no-regression bound with room for replay jitter
+        if not p99["chunked"] <= 1.35 * p99["chunked_sync"]:
+            failures.append(
+                f"loadgen: async dispatch regressed p99 TTFT beyond noise "
+                f"(async={p99['chunked']:.4f}s vs "
+                f"sync={p99['chunked_sync']:.4f}s)")
+        if not p99["adaptive"] <= p99["chunked_small"]:
+            failures.append(
+                f"loadgen: adaptive admission regressed p99 TTFT against "
+                f"the decode-friendly fixed chunk "
+                f"(adaptive={p99['adaptive']:.4f}s vs "
+                f"fifo-chunked={p99['chunked_small']:.4f}s)")
     for name, r in report["profiles"].items():
         md = r["site"]["modeled"]
         if not (md["two_sided"]["energy"] <= md["weight"]["energy"]

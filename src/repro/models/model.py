@@ -270,6 +270,15 @@ def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
     the live set is unchanged, the next block's ``tokens``/``pos`` inputs
     are exactly these outputs — no host round-trip or re-upload between
     blocks.
+
+    The carries also make **speculative dispatch** safe: a block launched
+    from them before the previous block's tokens reach the host is always
+    token-exact, even when host accounting later shrinks the live set —
+    a row that finished (EOS / budget) inside the previous block enters
+    this one with ``rem == 0``, so it emits only ``-1`` sentinels, never
+    commits state, and the host simply truncates it to zero tokens.
+    Speculation can waste device steps on such rows, but never corrupts
+    a stream (see ``repro.serve.engine`` async dispatch).
     """
     live = live.astype(bool)
     b = tokens.shape[0]
@@ -323,6 +332,12 @@ def prefill_into_slot(p: Params, cfg: ArchConfig, tokens: jax.Array,
     live slots' rows are bit-untouched, and the zero-reset stops recurrent
     state leaking from the slot's previous occupant.  Every per-layer state
     leaf carries batch at axis 1: (L, B, ...).
+
+    Because the non-admitted rows are pure masked filler, a prefill chunk
+    may run while a ``decode_many`` block is still in flight on other
+    slots: the chunk's stale view of those slots' ``slot_pos`` is harmless
+    (filler rows never commit), so chunked prefill composes with the
+    engine's async double-buffered dispatch without a drain.
     """
     b = slot_pos.shape[0]
     onehot = jnp.arange(b) == slot

@@ -1,6 +1,8 @@
 """repro.serve subsystem: continuous-batching engine over the flex-sparse
 dispatch stack."""
-from repro.serve.engine import (Request, SamplingParams, ServeEngine,
-                                decode_exec_config)
+from repro.serve.engine import (AdaptiveAdmission, AdmissionPolicy,
+                                FIFOAdmission, Request, SamplingParams,
+                                ServeEngine, decode_exec_config)
 
-__all__ = ["Request", "SamplingParams", "ServeEngine", "decode_exec_config"]
+__all__ = ["AdaptiveAdmission", "AdmissionPolicy", "FIFOAdmission",
+           "Request", "SamplingParams", "ServeEngine", "decode_exec_config"]

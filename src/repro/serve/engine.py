@@ -40,14 +40,54 @@ executables whose host cost is O(1) per *batch of tokens*:
     are inputs to every subsequent call, never outputs, so donating them
     would consume live buffers for zero aliasing benefit.
 
+**Async double-buffered dispatch** (the tentpole of ISSUE 7): even with the
+fused block, the host still sat on the critical path — each (T, n_slots)
+token block was synced (and its EOS/truncation accounting run) before the
+next block was dispatched, so the device idled for the whole host-side
+bookkeeping window (``host_frac ≈ 0.5`` on the edge profile).  With
+``async_dispatch`` (the default), block k+1 is dispatched from the
+device-resident (token, pos, rem) carries *before* block k's token array is
+synced: host accounting for block k then overlaps device compute for block
+k+1.  Host-side truncation/EOS accounting and occupancy updates are
+deferred by exactly one block.  The drain rule keeps this exact: a block is
+only speculated while the live set is unchanged (keyed by (slot, uid)
+pairs, so a recycled slot can never inherit a stale carry), and when block
+k's accounting reveals an occupancy change — a request finished, a prefill
+completed — the speculative block is drained cleanly: its tokens are still
+oracle-exact (rows that stopped emit the ``-1`` sentinel and never touch
+state), it just ran without the admission the host would now like to make.
+Two gates keep the deferral off the latency paths of the serving tick
+(``decode_block_step``): a block carrying some request's *first* token is
+synced in its own tick (first-token urgency — TTFT never pays the
+one-block deferral), and speculation is skipped while a request could
+join the live set this tick (``_joinable``: a slot mid-prefill, or a
+queued request with a free slot), so late joiners board the very next
+launch.  ``run_until_drained`` — a batch drain with no TTFT to protect —
+speculates whenever the carries are valid.  ``flush()`` syncs any
+in-flight block on demand;
+the per-token ``step()``, ``warmup()`` and ``maybe_recalibrate()`` flush
+implicitly.
+
+**Admission policy** (``AdmissionPolicy``): which queued request a freed
+slot takes, and how large a prefill chunk each tick feeds, are policy — not
+hard-coded FIFO + constant.  ``FIFOAdmission`` is the baseline (queue
+order, constructor ``prefill_chunk``); ``AdaptiveAdmission`` scales the
+chunk with live-decode occupancy (large chunks while slots idle, small
+chunks while decode is hot, power-of-two so the trace count stays bounded)
+and switches to shortest-prompt-first when the queue depth crosses its
+burst threshold.  Policies only reorder *scheduling*; per-request token
+streams are schedule-invariant (masked state commits keep slots
+independent), so every policy stays token-for-token equal to the oracle.
+
 The per-token ``step()`` API is kept as the reference oracle: it runs the
 same per-slot-position ``decode_step`` one token at a time, and the fused
 block is computation-identical to T oracle steps (test-enforced
 token-for-token across dense, planned-sparse MoE and tied-head families).
 ``run_until_drained`` drives the fused loop (``fused=False`` falls back to
 the oracle loop — the per-token baseline the throughput bench measures
-against), picking each block length as the min live-slot remaining budget
-clamped to ``decode_block`` so no slot overshoots its request.
+against), picking each block length as the max live-slot remaining budget
+clamped to ``decode_block``; per-slot device budgets stop each row at its
+own limit so no slot overshoots its request.
 
 Sparsity/dataflow wiring: an optional ``ExecConfig`` (see ``kernels.ops``)
 is installed around every decode trace, so the engine's matmul sites consult
@@ -189,6 +229,109 @@ class _Slot:
     prefill_cursor: int = 0       # prompt-feed tokens already prefilled
 
 
+@dataclass
+class _InflightBlock:
+    """A dispatched-but-unsynced ``decode_many`` block.
+
+    ``key`` is the live-set identity at dispatch time — ``(slot, uid)``
+    pairs, so a slot recycled to a new request can never be mistaken for
+    the one the block was dispatched for.  ``block`` is the (T, n_slots)
+    device token array; syncing it is the deferred host cost.
+    """
+    key: tuple
+    live: List[int]
+    t_block: int
+    block: jax.Array
+
+
+class AdmissionPolicy:
+    """Pluggable admission: queue ordering + prefill chunk sizing.
+
+    The engine consults the policy at two points:
+
+    * ``pick(queue, engine)`` — which queued request the next freed slot
+      takes (an index into ``queue``).  The base policy is FIFO (index 0).
+    * ``chunk(engine)`` — the prefill chunk size for the next feed, or
+      ``None`` for whole-prompt prefill (the stall baseline).  The base
+      policy returns the engine's constructor ``prefill_chunk``.
+
+    ``chunk_cap(engine)`` bounds every value ``chunk`` may return so
+    ``ServeEngine.warmup`` can precompile all dispatchable prefill shapes.
+    Policies must treat the engine as **read-only** scheduling state
+    (queue, slots, occupancy); they reorder work, they never change what
+    any request's token stream is — streams are schedule-invariant.
+    """
+
+    def pick(self, queue: Deque[Request], engine: "ServeEngine") -> int:
+        return 0
+
+    def chunk(self, engine: "ServeEngine") -> Optional[int]:
+        return engine.prefill_chunk
+
+    def chunk_cap(self, engine: "ServeEngine") -> Optional[int]:
+        """Largest chunk ``chunk`` may ever return (None = unbounded, the
+        whole-prompt path — warmup then compiles up to ``max_seq``)."""
+        return engine.prefill_chunk
+
+
+class FIFOAdmission(AdmissionPolicy):
+    """The explicit baseline: strict queue order, fixed constructor chunk.
+
+    This is the engine's default policy, named so benchmarks and tests can
+    select it against ``AdaptiveAdmission`` without relying on defaults.
+    """
+
+
+@dataclass(frozen=True)
+class AdaptiveAdmission(AdmissionPolicy):
+    """Occupancy-adaptive chunking + shortest-prompt-first under burst.
+
+    *Chunk sizing*: the prefill chunk scales with **live-decode occupancy**
+    (slots actively decoding / ``n_slots``).  Idle engine → ``max_chunk``
+    (admit long prompts in as few ticks as possible — nobody is waiting on
+    the device); fully hot engine → ``min_chunk`` (keep decode blocks
+    flowing, amortize admission over many ticks).  Interpolation is
+    geometric and the result is always a power of two, so the set of
+    compiled prefill shapes stays O(log max_chunk/min_chunk).
+
+    *Queue ordering*: while the queue depth is ≤ ``burst_depth`` admission
+    is FIFO; past it (a burst), the next freed slot takes the
+    shortest-prompt request — short requests stop inheriting the head-of-
+    line blocking of long prompts, which is exactly the p99 TTFT the
+    loadgen harness measures.
+
+    Both knobs reorder scheduling only: per-request token streams are
+    unchanged (test-enforced against the FIFO engine and the oracle).
+    """
+    min_chunk: int = 32
+    max_chunk: int = 256
+    burst_depth: int = 4
+
+    def __post_init__(self):
+        for name in ("min_chunk", "max_chunk"):
+            v = getattr(self, name)
+            if v < 1 or (v & (v - 1)) != 0:
+                raise ValueError(f"{name} must be a power of two >= 1, "
+                                 f"got {v}")
+        if self.min_chunk > self.max_chunk:
+            raise ValueError(
+                f"min_chunk={self.min_chunk} > max_chunk={self.max_chunk}")
+
+    def pick(self, queue: Deque[Request], engine: "ServeEngine") -> int:
+        if len(queue) > self.burst_depth:
+            return min(range(len(queue)),
+                       key=lambda i: len(queue[i].prompt))
+        return 0
+
+    def chunk(self, engine: "ServeEngine") -> Optional[int]:
+        occ = len(engine._live()) / max(engine.n_slots, 1)
+        span = (self.max_chunk // self.min_chunk).bit_length() - 1
+        return max(self.min_chunk, self.max_chunk >> round(occ * span))
+
+    def chunk_cap(self, engine: "ServeEngine") -> Optional[int]:
+        return self.max_chunk
+
+
 class ServeEngine:
     """Continuous-batching engine over the fused on-device executables.
 
@@ -199,6 +342,22 @@ class ServeEngine:
     fused executables alias the decode state in place (False keeps the
     state buffers alive across calls — used by timing harnesses that replay
     one call repeatedly).
+
+    ``async_dispatch`` (default True) double-buffers the fused loop: block
+    k+1 is dispatched from the device-resident (token, pos, rem) carries
+    *before* block k's token array is synced, so block k's host accounting
+    overlaps block k+1's device compute (``async_dispatch=False`` is the
+    sync baseline the async/sync host-overhead series measures against).
+    Token streams are unchanged either way — only dispatch order moves.
+    A block may be left in flight between ``decode_block_step`` calls; its
+    tokens are credited on the next call (or by ``flush()``).
+
+    ``admission`` plugs the admission policy (queue ordering + prefill
+    chunk sizing); the default ``FIFOAdmission`` reproduces the classic
+    behaviour: strict queue order with the constructor ``prefill_chunk``
+    (``None`` = whole-prompt prefill, the stall baseline).  See
+    ``AdaptiveAdmission`` for occupancy-adaptive chunking and
+    shortest-prompt-first admission under burst.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, n_slots: int = 4,
@@ -207,7 +366,9 @@ class ServeEngine:
                  verify_plan: bool = True, fused: bool = True,
                  decode_block: int = 16, donate_state: bool = True,
                  eos_id: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 async_dispatch: bool = True,
+                 admission: Optional[AdmissionPolicy] = None):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.exec_cfg = exec_cfg
@@ -225,6 +386,18 @@ class ServeEngine:
                              f"got {prefill_chunk}")
         self.prefill_chunk = prefill_chunk
         self._prefill_rr = 0          # round-robin over mid-prefill slots
+        self.async_dispatch = async_dispatch
+        if admission is not None and not isinstance(admission,
+                                                    AdmissionPolicy):
+            raise TypeError(f"admission must be an AdmissionPolicy, got "
+                            f"{type(admission).__name__}")
+        self.admission = admission if admission is not None \
+            else FIFOAdmission()
+        # async double-buffering state: dispatched-but-unsynced blocks
+        # (oldest first; depth <= 2) and the device (token, pos, rem)
+        # carries keyed by the (slot, uid) live set they were produced for
+        self._inflight: List[_InflightBlock] = []
+        self._carry: Optional[tuple] = None
         self.state = model_lib.init_decode_state(cfg, n_slots, max_seq,
                                                  dtype=dtype)
         self.slots = [_Slot() for _ in range(n_slots)]
@@ -298,7 +471,10 @@ class ServeEngine:
         # stale-trace hygiene: the mask cache holds device arrays handed to
         # the retired executables — clear every per-engine cache alongside
         # the rebuild so nothing compiled against the old table survives
+        # (the device carries likewise came out of the retired executables;
+        # callers flush in-flight blocks before rebuilding)
         self._mask_cache.clear()
+        self._carry = None
 
     def warmup(self):
         """Precompile every executable shape the serving loop can dispatch,
@@ -307,7 +483,11 @@ class ServeEngine:
         prefill segment length (up to ``prefill_chunk``, or ``max_seq``
         for whole-prompt prefill), and the per-token oracle step.  All
         dispatches run with every row masked inactive, so decode state is
-        untouched (the donated calls re-thread it in place)."""
+        untouched (the donated calls re-thread it in place).  Prefill
+        shapes are compiled up to the admission policy's ``chunk_cap``
+        (``max_seq`` for the whole-prompt path).  Flushes any in-flight
+        block first — warmup belongs off the serving clock."""
+        self.flush()
         zero = np.zeros((self.n_slots,), np.int32)
         dead = np.zeros((self.n_slots,), bool)
         t = 1
@@ -318,7 +498,7 @@ class ServeEngine:
             t *= 2
         self._decode(self._exec_params, zero[:, None], self.state, zero,
                      dead)
-        cap = _next_pow2(self.prefill_chunk or self.max_seq)
+        cap = _next_pow2(self.admission.chunk_cap(self) or self.max_seq)
         p = 1
         while p <= cap:
             self.state = self._prefill(
@@ -374,9 +554,14 @@ class ServeEngine:
         threshold, else ``None``.  ``recompile=False`` answers only the
         trigger question (no schedule/plan rebuild) — the unit-testable
         half of the policy.
+
+        Any async in-flight block is flushed first: its tokens are credited
+        (and its popcounts land) before the window is judged, and the
+        executable rebuild never strands an unsynced block.
         """
         if self.exec_cfg is None or self._stats is None:
             return None
+        self.flush()
         measured = self.activation_densities()
         if not measured:
             return None
@@ -507,8 +692,10 @@ class ServeEngine:
         s.pos = s.prefill_cursor
 
     def _admit(self):
-        """Move queued requests into free slots.  Short prompts (feed fits
-        one chunk, or ``prefill_chunk`` unset) prefill whole at admit;
+        """Move queued requests into free slots.  The ``admission`` policy
+        picks *which* queued request each freed slot takes (FIFO by
+        default) and sizes the prefill chunk.  Short prompts (feed fits one
+        chunk, or the policy returns ``None``) prefill whole at admit;
         longer prompts feed their first chunk now (the zero-reset rides on
         it) and the rest via ``_advance_prefill`` interleaved with decode
         blocks, so a long prompt never stalls live decodes."""
@@ -516,11 +703,13 @@ class ServeEngine:
         for i in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.popleft()
+            idx = self.admission.pick(self.queue, self)
+            req = self.queue[idx]
+            del self.queue[idx]
             self.slots[i] = _Slot(req=req, pos=0, prefill_cursor=0)
             feed_len = self._feed_len(req)
-            count = (feed_len if self.prefill_chunk is None
-                     else min(feed_len, self.prefill_chunk))
+            chunk = self.admission.chunk(self)
+            count = feed_len if chunk is None else min(feed_len, chunk)
             # feed_len == 0 (length-1 prompt): the call runs one fully
             # masked step whose only effect is the slot-row zero-reset
             self._feed_prefill(i, 0, count)
@@ -538,15 +727,18 @@ class ServeEngine:
     def _advance_prefill(self) -> bool:
         """Feed one pending prefill chunk (round-robin over mid-prefill
         slots) — the prefill half of the chunked-prefill / decode-block
-        interleave.  Returns True when a chunk was fed."""
+        interleave.  Chunk size comes from the ``admission`` policy each
+        tick (adaptive policies re-size per feed as occupancy moves).
+        Returns True when a chunk was fed."""
         pend = self._prefilling()
         if not pend:
             return False
         i = pend[self._prefill_rr % len(pend)]
         self._prefill_rr += 1
         s = self.slots[i]
+        chunk = self.admission.chunk(self)
         count = (self._feed_len(s.req) - s.prefill_cursor
-                 if self.prefill_chunk is None else self.prefill_chunk)
+                 if chunk is None else chunk)
         self._feed_prefill(i, s.prefill_cursor, count)
         return True
 
@@ -643,7 +835,12 @@ class ServeEngine:
         token-0 filler rows for dead slots, same masked state commits, same
         position-keyed sampling).  The host syncs the logits and picks the
         token here — the cost the fused loop amortizes away.
+
+        Any async in-flight block is flushed first (its tokens are credited
+        to the requests but not returned here — this call's return is this
+        step's tokens only).
         """
+        self.flush()
         self._admit()
         self._advance_prefill()
         live = self._live()
@@ -699,42 +896,159 @@ class ServeEngine:
                              (self.max_seq - 1) - s.pos), 0)
         return rem
 
-    def _run_block(self, live: List[int], t_block: int, toks_in, pos_in
-                   ) -> tuple:
-        """Dispatch one fused ``decode_many`` block and credit its tokens.
+    # ---- async double-buffered block machinery ----
+    def _live_key(self, live: List[int]) -> tuple:
+        """Occupancy identity for a live set: (slot, uid) pairs.  The carry
+        / speculation validity key — slot indices alone would alias a slot
+        recycled to a *different* request between blocks."""
+        return tuple((i, self.slots[i].req.uid) for i in live)
 
-        The single home of the block semantics, shared by the streaming
-        ``decode_block_step`` (host-built inputs) and the drain loop
-        (device-resident carries).  Returns ({uid: [tokens]}, token carry,
-        pos carry) — the carries feed the next block device-to-device when
-        occupancy is unchanged."""
+    def _dispatch_block(self, live: List[int], t_block: int, toks_in,
+                        pos_in, rem_in):
+        """Dispatch one fused ``decode_many`` block WITHOUT syncing its
+        token array: the (T, n_slots) block is parked on ``_inflight`` and
+        the device (token, pos, rem) carries are retained for the next
+        launch.  ``_account_one`` later pays the deferred host cost."""
         samp = self._sampling_arrays(live)
         temp, topk, seeds = samp if samp is not None else (None, None, None)
-        block, self.state, dev_tok, dev_pos, _ = self._decode_many(
+        block, self.state, dev_tok, dev_pos, dev_rem = self._decode_many(
             self._exec_params, self.state, toks_in, pos_in,
-            self._live_mask(live), self._slot_budgets(live),
-            temp, topk, seeds, t_block)
-        block = np.asarray(block)            # (T, n_slots): ONE host sync
-        return self._append_block(live, block, t_block), dev_tok, dev_pos
+            self._live_mask(live), rem_in, temp, topk, seeds, t_block)
+        key = self._live_key(live)
+        self._carry = (key, dev_tok, dev_pos, dev_rem)
+        self._inflight.append(_InflightBlock(key, list(live), t_block,
+                                             block))
+
+    def _launch(self, live: List[int], t_block: int):
+        """Launch a block for ``live``: from the device carries when they
+        match this exact occupancy (no host round-trip — the async fast
+        path), else from host-built inputs (first block, or after an
+        occupancy change invalidated the carries)."""
+        if self._carry is not None and self._carry[0] == self._live_key(live):
+            _, dev_tok, dev_pos, dev_rem = self._carry
+            self._dispatch_block(live, t_block, dev_tok, dev_pos, dev_rem)
+        else:
+            self._dispatch_block(live, t_block, self._current_tokens(live),
+                                 self._slot_positions(),
+                                 self._slot_budgets(live))
+
+    def _account_one(self, out: Optional[Dict[int, List[int]]] = None
+                     ) -> bool:
+        """Sync + credit the oldest in-flight block — the deferred host
+        accounting (token-block sync, EOS/sentinel truncation, budget and
+        ``max_seq``-wall completion checks).  Merges the credited tokens
+        into ``out`` when given.  Returns True when any of the block's
+        requests finished — the occupancy-change signal that invalidates a
+        speculatively dispatched successor block's live set."""
+        blk = self._inflight.pop(0)
+        credited = self._append_block(blk.live, np.asarray(blk.block),
+                                      blk.t_block)
+        if out is not None:
+            for uid, toks in credited.items():
+                out.setdefault(uid, []).extend(toks)
+        return any(self.slots[i].req.done for i in blk.live)
+
+    def flush(self) -> Dict[int, List[int]]:
+        """Sync and credit every async in-flight block; returns the
+        {uid: [tokens]} they produced (empty when nothing was pending).
+        Call before inspecting request/slot state mid-traffic; the drain
+        loops, ``step()``, ``warmup()`` and ``maybe_recalibrate()`` flush
+        on their own."""
+        out: Dict[int, List[int]] = {}
+        while self._inflight:
+            self._account_one(out)
+        return out
+
+    def _joinable(self) -> bool:
+        """True when a request could join the live set this tick — a slot
+        is mid-prefill, or the queue is non-empty with a free slot.
+        Speculating past such a tick would pin the in-flight occupancy for
+        one more block and make the joiner wait it out; skipping the
+        speculation makes the tick behave like sync dispatch, so late
+        joiners board the very next launch and async p99 TTFT tracks
+        sync's.  At full occupancy with no pending prefill (the
+        steady-state decode regime) this is False and double-buffering
+        runs uninhibited."""
+        return bool(self._prefilling()
+                    or (self.queue and self._free_slots()))
+
+    def _block_len_ahead(self, live: List[int], budget: int,
+                         inflight_t: int) -> int:
+        """Block length for a *speculative* launch: host budgets are stale
+        by exactly the ``inflight_t`` unaccounted steps of the pending
+        block, so subtract them before sizing.  Returns 0 when every live
+        row will have exhausted its budget inside the pending block —
+        speculating would dispatch a pure-sentinel block (EOS can still
+        stop rows earlier; that waste is bounded by one block and drained
+        on the occupancy change)."""
+        rem = max(
+            min(s.req.max_new - len(s.req.out),
+                (self.max_seq - 1) - s.pos) - inflight_t
+            for s in (self.slots[i] for i in live))
+        if rem <= 0:
+            return 0
+        t = max(1, min(rem, budget))
+        return 1 << (t.bit_length() - 1)
 
     def decode_block_step(self, n_steps: Optional[int] = None
                           ) -> Dict[int, List[int]]:
-        """One fused block: admit, feed one pending prefill chunk, decode T
-        steps on-device, sync the (T, n_slots) token block once.  Returns
-        {uid: [tokens]} for live slots.  ``n_steps`` caps the block
-        (default ``decode_block``); per-slot device budgets stop each row
-        at its own limit, so no request overshoots.
+        """One fused serving tick: admit, feed one pending prefill chunk,
+        decode one T-step block on-device.  Returns {uid: [tokens]}.
+        ``n_steps`` caps the block (default ``decode_block``); per-slot
+        device budgets stop each row at its own limit, so no request
+        overshoots.
+
+        With ``async_dispatch`` the tick is double-buffered across calls:
+        block k launches from the device carries *before* block k-1's
+        token sync, so the device never idles over the tick boundary and
+        the returned tokens are the *previous* call's block (one block of
+        latency; ``flush()`` collects the tail).  Two exceptions keep the
+        deferral off the latency paths: a block carrying some live
+        request's *first* token is synced in this call (first-token
+        urgency — TTFT never pays the deferral), and no block is
+        speculated while a request could join the live set this tick
+        (``_joinable``).  If block k-1's accounting reveals an occupancy
+        change, the speculative block k is drained in the same call — its
+        tokens are still exact — and the next tick relaunches from host
+        state.  ``async_dispatch=False`` syncs the block it dispatched
+        (classic one-block-per-call behaviour).
         """
+        budget = max(1, self.decode_block if n_steps is None else n_steps)
+        out: Dict[int, List[int]] = {}
+        launched = False
+        if self.async_dispatch and self._inflight:
+            live = self._live()
+            if live and not self._joinable() and self._carry is not None \
+                    and self._carry[0] == self._live_key(live):
+                t_spec = self._block_len_ahead(
+                    live, budget, self._inflight[-1].t_block)
+                if t_spec > 0:
+                    self._launch(live, t_spec)
+                    launched = True
+            if self._account_one(out) and launched:
+                # occupancy changed under the speculative block: drain it
+                # cleanly (finished rows emitted sentinels, its tokens are
+                # exact) and relaunch from host state below
+                self._account_one(out)
+                launched = False
+        elif self._inflight:
+            out = self.flush()
         self._admit()
         self._advance_prefill()
         live = self._live()
-        if not live:
-            return {}
-        t_block = self._block_len(
-            live, self.decode_block if n_steps is None else n_steps)
-        out, _, _ = self._run_block(live, t_block,
-                                    self._current_tokens(live),
-                                    self._slot_positions())
+        if not live or launched:
+            return out
+        t_block = self._block_len(live, budget)
+        self._launch(live, t_block)
+        # First-token urgency: deferral trades latency for throughput, and
+        # a request that has not streamed its first token yet is paying
+        # that latency straight into its TTFT.  Sync such blocks on the
+        # spot; defer only in the steady state where every live request is
+        # already streaming (the carry is still set, so the next tick
+        # speculates from device state either way).
+        if not self.async_dispatch \
+                or any(not self.slots[i].req.out for i in live):
+            self._account_one(out)
         return out
 
     def _collect(self, results: Dict[int, List[int]]):
@@ -742,57 +1056,96 @@ class ServeEngine:
             if s.req is not None and s.req.done:
                 results[s.req.uid] = s.req.out
 
+    def _drained(self) -> bool:
+        return (not self.queue and not self._prefilling()
+                and all(s.req is None or s.req.done for s in self.slots))
+
     def run_until_drained(self, max_steps: int = 1024) -> Dict[int, List[int]]:
         """Serve until queue and slots drain (or ``max_steps`` decode
         steps).  ``fused=True`` drives ``decode_many`` blocks — host work
         per block is one dispatch and one token-block sync; each iteration
         also feeds one pending prefill chunk, so long prompts admit across
         several blocks instead of stalling live decodes.  ``fused=False``
-        is the per-token oracle loop."""
+        is the per-token oracle loop.
+
+        With ``async_dispatch`` the loop pipelines: while block k is in
+        flight, block k+1 is dispatched from the device-resident (token,
+        pos, rem) carries, *then* block k's token array is synced — block
+        k's host accounting (truncation, EOS, occupancy updates) runs
+        entirely under block k+1's device compute.  Speculation is sized by
+        ``_block_len_ahead`` and gated on the (slot, uid) live-set key —
+        but *not* on ``_joinable``: a batch drain has no TTFT to protect,
+        so it speculates whenever the carries are valid (the serving tick
+        ``decode_block_step`` is the latency-aware path);
+        when block k's accounting changes the occupancy (a request
+        finished, a prefill chunk completed a feed), the in-flight
+        speculative block is drained cleanly and the next block launches
+        from host state — the "clean drain on occupancy change" rule."""
         if not self.fused:
             return self._run_per_token(max_steps)
         results: Dict[int, List[int]] = {}
         steps = 0
-        # device-resident block carries: while the live set is unchanged,
-        # decode_many's (token, pos) outputs ARE the next block's inputs —
-        # blocks chain device-to-device and the only per-block host↔device
-        # traffic is the (T, n_slots) token-block sync.  A prefill chunk
-        # feeding a *different* (masked-out) slot leaves the carries valid;
-        # any live-set change rebuilds them from host state.
-        dev_tok = dev_pos = None
-        live_key: Optional[List[int]] = None
-        while steps < max_steps:
-            # capture already-finished slots before admission overwrites
-            # them (requests can finish in decode_block_step/step calls
-            # made outside this drain)
-            self._collect(results)
-            admitted = self._admit()
-            fed = self._advance_prefill()
-            live = self._live()
-            if not live:
-                if fed or self._prefilling():
-                    # prefill-only iteration: chunks are still landing but
-                    # nothing decodes yet — count one step so a stuck
-                    # prefill cannot loop forever
-                    steps += 1
-                    continue
+        while True:
+            if not self._inflight:
+                # capture already-finished slots before admission
+                # overwrites them (requests can finish in
+                # decode_block_step/step calls made outside this drain)
                 self._collect(results)
-                break
-            t_block = self._block_len(
-                live, min(self.decode_block, max_steps - steps))
-            if admitted or live != live_key or dev_tok is None:
-                toks_in = self._current_tokens(live)
-                pos_in = self._slot_positions()
-                live_key = live
-            else:
-                toks_in, pos_in = dev_tok, dev_pos
-            _, dev_tok, dev_pos = self._run_block(live, t_block, toks_in,
-                                                  pos_in)
-            steps += t_block
+                self._admit()
+                fed = self._advance_prefill()
+                live = self._live()
+                if not live:
+                    if (fed or self._prefilling()) and steps < max_steps:
+                        # prefill-only iteration: chunks are still landing
+                        # but nothing decodes yet — count one step so a
+                        # stuck prefill cannot loop forever
+                        steps += 1
+                        continue
+                    self._collect(results)
+                    break
+                if steps >= max_steps:
+                    break
+                t_block = self._block_len(
+                    live, min(self.decode_block, max_steps - steps))
+                self._launch(live, t_block)
+                steps += t_block
+                if not self.async_dispatch:
+                    self._account_one()
+                    self._collect(results)
+                    if self._drained():
+                        break
+                continue
+            # async: block k is in flight — dispatch block k+1 from the
+            # device carries BEFORE syncing block k, so the host accounting
+            # below overlaps block k+1's device compute.  A prefill chunk
+            # can ride here too: it feeds a masked-out slot, which leaves
+            # the decode carries untouched.
+            self._advance_prefill()
+            live = self._live()
+            speculated = False
+            # (no `_joinable` gate here: a batch drain has no TTFT to
+            # protect, so throughput-optimal speculation runs whenever the
+            # carries are valid — the occupancy-change drain below still
+            # bounds the cost of speculating past a finish to one block)
+            if steps < max_steps and live \
+                    and self._carry is not None \
+                    and self._carry[0] == self._live_key(live):
+                t_spec = self._block_len_ahead(
+                    live, min(self.decode_block, max_steps - steps),
+                    self._inflight[-1].t_block)
+                if t_spec > 0:
+                    self._launch(live, t_spec)
+                    steps += t_spec
+                    speculated = True
+            changed = self._account_one()
             self._collect(results)
-            if not self.queue and not self._prefilling() \
-                    and all(s.req is None or s.req.done
-                            for s in self.slots):
+            if changed and speculated:
+                # occupancy changed under the speculative block: drain it
+                # (its tokens are still oracle-exact) so the next launch
+                # sees the post-change occupancy from host state
+                self._account_one()
+                self._collect(results)
+            if not self._inflight and self._drained():
                 break
         return results
 

@@ -1,0 +1,56 @@
+"""Docs link check: every relative markdown link in README.md and docs/
+must resolve to a real file (CI runs this; a renamed doc or a typo'd
+path fails the build instead of shipping a dead link).
+
+Run:  python tools/check_doc_links.py
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    yield os.path.join(ROOT, "README.md")
+    docs = os.path.join(ROOT, "docs")
+    for name in sorted(os.listdir(docs)):
+        if name.endswith(".md"):
+            yield os.path.join(docs, name)
+
+
+def check(path: str) -> list:
+    bad = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]     # strip in-page anchors
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path),
+                                                 rel))
+        if not os.path.exists(resolved):
+            bad.append((target, resolved))
+    return bad
+
+
+def main() -> int:
+    failures = 0
+    for path in doc_files():
+        rel_doc = os.path.relpath(path, ROOT)
+        for target, resolved in check(path):
+            print(f"{rel_doc}: dead link '{target}' "
+                  f"(resolved to {os.path.relpath(resolved, ROOT)})")
+            failures += 1
+    if failures:
+        print(f"{failures} dead link(s)")
+        return 1
+    print("docs links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
