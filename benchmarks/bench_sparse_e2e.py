@@ -362,6 +362,85 @@ def bench_serve_throughput(name: str, spec: dict, wt_sparsity: float,
     }
 
 
+def bench_quantized_engine(wt_sparsity: float, arch: str = "stablelm-1.6b",
+                           repeats: int = 2) -> Dict[str, object]:
+    """int8 × sparsity engine profile: the same pruned smoke LM served by a
+    sparse-only planned engine and by the quantized planned engine
+    (``quantize=True`` — int8 payloads + fused scale epilogue through the
+    same fused loop), reporting
+
+      * **compounded modeled HBM weight bytes** — the plan's at-rest ZVC
+        bytes vs the int8+ZVC bytes (payload 1 byte + bitmap + per-channel
+        scales): the compounding claim as a measured ratio,
+      * **schedule-level modeled traffic** — Σ per-site ``hbm_bytes`` under
+        the selector's bf16 vs int8 byte model (what the descriptor argmin
+        actually ranked),
+      * **tokens/sec** for both fused engines (CPU wall-clock validates the
+        plumbing; the modeled columns carry the bandwidth claim),
+      * a greedy token-stream check: the quantized fused engine must match
+        a *dequantized-dense* oracle engine exactly (same int8 rounding, no
+        plan, per-token loop) — fusion changes bytes, never the math.
+    """
+    from repro.quant.quantize import dequantize_params, quantize_params
+    cfg = get_smoke_config(arch)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.float32)
+    params = _prune_stack(params, wt_sparsity)
+    sp_cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+        weight_sparsity=wt_sparsity, activation_threshold=0.05))
+    ec_sp = decode_exec_config(sp_cfg, n_slots=2, params=params)
+    ec_q = decode_exec_config(sp_cfg, n_slots=2, params=params,
+                              quantize=True)
+    out: Dict[str, object] = {"arch": arch, "wt_sparsity": wt_sparsity}
+
+    # modeled at-rest weight bytes from the compiled plans (measured
+    # bitmaps, not priors): sparse-only vs compounded int8+sparse
+    sp_stats = ec_sp.plan.stats()
+    q_stats = ec_q.plan.stats()
+    dense_b = sum(v["dense_bytes"] for v in sp_stats.values())
+    zvc_b = sum(v["zvc_bytes"] for v in sp_stats.values())
+    int8_b = sum(v["int8_zvc_bytes"] for v in q_stats.values())
+    out["modeled_weight_bytes"] = {
+        "dense": dense_b, "sparse_zvc": zvc_b, "int8_zvc": int8_b,
+        "int8_vs_sparse_reduction": zvc_b / int8_b,
+        "int8_vs_dense_reduction": dense_b / int8_b,
+    }
+    # schedule-level modeled HBM traffic (the selector's argmin surface)
+    out["modeled_schedule_hbm_bytes"] = {
+        "sparse": sum(d.schedule.hbm_bytes
+                      for d in ec_sp.schedules.sites.values()),
+        "int8_sparse": sum(d.schedule.hbm_bytes
+                           for d in ec_q.schedules.sites.values()),
+    }
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+               for _ in range(2)]
+    kw = dict(n_slots=2, max_seq=64, decode_block=16)
+    tps: Dict[str, float] = {}
+    streams: Dict[str, list] = {}
+    for label, eng in (
+            ("sparse", ServeEngine(cfg, params, exec_cfg=ec_sp, **kw)),
+            ("int8_sparse", ServeEngine(cfg, params, exec_cfg=ec_q,
+                                        quantize=True, **kw))):
+        _drain_tps(eng, prompts, 24)                   # warm the jit
+        for _ in range(repeats):
+            t, res = _drain_tps(eng, prompts, 24)
+            tps[label] = max(tps.get(label, 0.0), t)
+            streams[label] = res
+    out["tokens_per_s"] = tps
+    # oracle: dequantize the (deterministically re-)quantized tree, serve
+    # per-token without any plan — same rounding error, none of the fusion
+    qp, _ = quantize_params(params, tie_embeddings=cfg.tie_embeddings)
+    oracle = ServeEngine(cfg, dequantize_params(qp, dtype=jnp.float32),
+                         fused=False, **kw)
+    uids = [oracle.submit(p, max_new=24) for p in prompts]
+    res = oracle.run_until_drained()
+    out["tokens_match_dequant_oracle"] = (
+        streams["int8_sparse"] == [res[u] for u in uids])
+    return out
+
+
 def bench_recalibration_after_fused(wt_sparsity: float) -> Dict[str, object]:
     """Popcount feedback + ``maybe_recalibrate`` stay functional after a
     fused run — the collect_stats callbacks fire from inside the scanned
@@ -608,6 +687,27 @@ def run(out_path: str, verbose: bool = True,
     # load generator: Poisson arrivals + mixed lengths, chunked prefill vs
     # the stall-on-prefill baseline — the p50/p99 TTFT series in the perf
     # trajectory from this PR onward (part of --quick)
+    # int8 × sparsity engine profile: the compounded HBM weight-byte claim
+    # (ZVC alone vs int8+ZVC) with the fused quantized engine's tokens/sec
+    # and its token-exactness against the dequantized-dense oracle — part
+    # of --quick so CI tracks the compounding ratio from this PR onward
+    q8 = bench_quantized_engine(wt_sp)
+    report["quantized_engine"] = q8
+    if verbose:
+        mb = q8["modeled_weight_bytes"]
+        sb = q8["modeled_schedule_hbm_bytes"]
+        qt = q8["tokens_per_s"]
+        print(f"int8[{q8['arch']}]: weight bytes "
+              f"dense={mb['dense']/2**20:.2f} MiB "
+              f"zvc={mb['sparse_zvc']/2**20:.2f} MiB "
+              f"int8+zvc={mb['int8_zvc']/2**20:.2f} MiB "
+              f"(int8/sparse {mb['int8_vs_sparse_reduction']:.2f}x, "
+              f"int8/dense {mb['int8_vs_dense_reduction']:.2f}x)")
+        print(f"int8: schedule hbm sparse={sb['sparse']/2**20:.2f} MiB "
+              f"int8_sparse={sb['int8_sparse']/2**20:.2f} MiB  "
+              f"tok/s sparse={qt['sparse']:.0f} "
+              f"int8_sparse={qt['int8_sparse']:.0f}  "
+              f"tokens match oracle: {q8['tokens_match_dequant_oracle']}")
     lg = bench_serve_loadgen(quick=quick)
     report["serve_load"] = lg
     if verbose:
@@ -706,6 +806,24 @@ def validate(report: Dict[str, object]) -> list:
             f"edge_tiny: async dispatch did not reduce the host-overhead "
             f"fraction (async={hf.get('fused_async')} vs "
             f"sync={hf.get('fused')}, tolerance 0.03)")
+    q8 = report.get("quantized_engine", {})
+    if not q8:
+        failures.append("no int8 x sparsity engine section in the report")
+    else:
+        red = q8.get("modeled_weight_bytes", {}).get(
+            "int8_vs_sparse_reduction", 0.0)
+        if red < 1.5:
+            failures.append(
+                f"int8: compounded HBM weight bytes under 1.5x the "
+                f"sparse-only plan ({red:.2f}x)")
+        sb = q8.get("modeled_schedule_hbm_bytes", {})
+        if not sb.get("int8_sparse", float("inf")) < sb.get("sparse", 0.0):
+            failures.append(
+                f"int8: schedule-level modeled traffic did not drop under "
+                f"the int8 byte model ({sb})")
+        if not q8.get("tokens_match_dequant_oracle"):
+            failures.append("int8: quantized fused stream diverged from "
+                            "the dequantized-dense oracle")
     lg = report.get("serve_load", {})
     if not lg:
         failures.append("no load-generator section in the report")

@@ -178,6 +178,7 @@ def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
                              hw: TPUHardware = TPU_V5E,
                              wt_densities: Optional[Dict[str, float]] = None,
                              act_densities: Optional[Dict[str, float]] = None,
+                             quantize: bool = False,
                              ) -> NetworkSchedule:
     """The compiler pass: optimal schedule per site (§III-A role).
 
@@ -186,10 +187,16 @@ def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
     ``WeightSparsityPlan`` (``plan.wt_densities()``), activation side from
     runtime bitmap popcounts fed back by the engine
     (``ServeEngine.activation_densities()``).
+
+    ``quantize`` costs every site's weight operand at int8 width
+    (``wt_bytes=1`` into the selector; activations stay ``in_bytes``), so
+    the argmin ranks schedules by the compounded int8 × ZVC traffic — the
+    byte model the quantized serving path actually executes under.
     """
     ns = NetworkSchedule(arch=cfg.name, shape=shape.name)
     spars = sparsity_mode_for(cfg)
     act_d, wt_d = sparsity_densities_for(cfg)
+    wt_bytes = 1 if quantize else None
     for site, m, n, k in matmul_sites(cfg, shape, model_shards):
         # tied head = the (never-pruned, never-planned) embedding table: its
         # FL bitmap is always all-live, so sparse dispatch would pay the
@@ -202,10 +209,14 @@ def compile_network_schedule(cfg: ArchConfig, shape: ShapeConfig, *,
         # site's weight is K-sharded (attn.out / mlp.out style sites).
         k_sharded = site.endswith(".out") or site.endswith("out_proj")
         ic_p = model_shards if (k_sharded and model_shards > 1) else 1
+        # a tied (never-quantized) head also keeps the bf16 weight bytes
+        site_wb = None if (site == "lm_head" and cfg.tie_embeddings) \
+            else wt_bytes
         sched = select_matmul_schedule(
             m, n, k, hw=hw, ic_p=ic_p, sparsity_mode=mode,
             act_density=(act_densities or {}).get(site, act_d),
-            wt_density=(wt_densities or {}).get(site, wt_d))
+            wt_density=(wt_densities or {}).get(site, wt_d),
+            wt_bytes=site_wb)
         payload = m * n * 4.0     # f32 psums
         strat = best_strategy(payload, ic_p, consumer_sharded=False)
         ns.sites[site] = SiteDescriptor(
@@ -245,6 +256,16 @@ def site_plan_estimate(d: SiteDescriptor, cfg: ArchConfig,
     dense_bytes = d.k * d.n * in_bytes * n_mats
     zvc_bytes = (dense_bytes * wt_d + n_mats * d.k * d.n / 8.0 if sparse
                  else float(dense_bytes))
+    # int8 columns: the same at-rest economics with a 1-byte payload plus
+    # the per-output-channel f32 scales — reported unconditionally so the
+    # dry-run records the quantization headroom even for bf16 plans
+    n_elems = n_mats * d.k * d.n
+    nnz = n_elems * (wt_d if sparse else 1.0)
+    n_channels = n_mats * d.n
+    from repro.core.energy_model import zvc_weight_bytes
+    int8_zvc = (zvc_weight_bytes(n_elems, nnz, quantized=True,
+                                 n_channels=n_channels) if sparse
+                else float(nnz) + 4.0 * n_channels)
     out = {
         "sparsity_mode": d.sparsity_mode,
         "wt_density": wt_d if sparse else 1.0,
@@ -253,6 +274,9 @@ def site_plan_estimate(d: SiteDescriptor, cfg: ArchConfig,
         "dense_bytes": dense_bytes,
         "zvc_bytes": zvc_bytes,
         "bytes_saved": max(dense_bytes - zvc_bytes, 0.0),
+        "int8_zvc_bytes": int8_zvc,
+        "bytes_saved_int8": max(dense_bytes - int8_zvc, 0.0),
+        "int8_vs_sparse_reduction": zvc_bytes / int8_zvc if int8_zvc else 1.0,
     }
     if n_mats > 1:
         out["experts"] = n_mats

@@ -34,6 +34,26 @@ from typing import Dict, Optional, Sequence, Tuple
 PSUM_BYTES = 4       # psum precision (32-bit, §III-B external psum bypass)
 DATA_BYTES = 1       # INT8 activations/weights (§IV)
 BITMAP_OVERHEAD = 1.0 / 8.0   # 1 bit of bitmap per data byte (§IV)
+SCALE_BYTES = 4      # f32 per-output-channel dequant scale (TPU int8 path)
+
+
+def zvc_weight_bytes(n_elems: float, nnz: float, *, elem_bytes: float = 2,
+                     quantized: bool = False, n_channels: float = 0
+                     ) -> float:
+    """Weight storage under ZVC (§IV), optionally compounded with int8.
+
+    The ASIC model above is int8-native (``DATA_BYTES = 1``); the TPU
+    serving path stores bf16/f32 weights unless quantized.  This is the
+    shared byte model for that path: packed non-zeros at ``elem_bytes``
+    (1 when ``quantized``) + the 1-bit/element ZVC bitmap + the f32
+    per-output-channel scales the int8 representation adds.  Quantization
+    is zero-preserving (``quant.quantize_weight``), so ``nnz`` — and the
+    bitmap — are the same in both representations: the ZVC and int8
+    savings *compound*, the paper's §IV + §III-A claim.
+    """
+    data = nnz * (1.0 if quantized else float(elem_bytes))
+    scales = SCALE_BYTES * float(n_channels) if quantized else 0.0
+    return data + n_elems / 8.0 + scales
 
 
 # ---------------------------------------------------------------------------

@@ -225,7 +225,9 @@ class MatmulSchedule:
 
     ``sparsity_mode`` records the skip capability the schedule was costed
     under (dense | weight | two_sided); ``hbm_bytes``/``flops`` already carry
-    the ZVC/CSB discounts for that mode."""
+    the ZVC/CSB discounts for that mode.  ``wt_bytes`` is the weight element
+    width the traffic model used (1 for int8-quantized weights — activations
+    keep ``in_bytes``), so int8 × ZVC savings compound in the argmin."""
     stationarity: str          # 'output' | 'weight' | 'input'
     bm: int
     bn: int
@@ -234,6 +236,7 @@ class MatmulSchedule:
     hbm_bytes: float = 0.0
     flops: float = 0.0
     sparsity_mode: str = "dense"
+    wt_bytes: int = 2
 
     @property
     def grid_order(self) -> Tuple[str, ...]:
@@ -248,15 +251,19 @@ class MatmulSchedule:
 def _mm_hbm_bytes(m: int, n: int, k: int, bm: int, bn: int, bk: int,
                   stat: str, in_bytes: int = 2, out_bytes: int = 2,
                   acc_bytes: int = 4, a_scale: float = 1.0,
-                  b_scale: float = 1.0) -> float:
+                  b_scale: float = 1.0,
+                  wt_bytes: Optional[int] = None) -> float:
     """HBM traffic for a tiled matmul under a stationarity choice — the same
     refetch counting as ``energy_model`` with VMEM playing the RF role.
 
     ``a_scale``/``b_scale`` discount operand fetches for ZVC-compressed
     sparse operands (density + the 1 bit/element bitmap overhead); psum/
-    output traffic is never discounted (results are dense)."""
+    output traffic is never discounted (results are dense).  ``wt_bytes``
+    overrides the B-operand element width (int8 weights = 1 byte while
+    activations stay ``in_bytes``); None = same as ``in_bytes``."""
     tm, tn, tk = -(-m // bm), -(-n // bn), -(-k // bk)
-    a_tile, b_tile, o_tile = bm * bk * in_bytes, bk * bn * in_bytes, bm * bn
+    wb = in_bytes if wt_bytes is None else wt_bytes
+    a_tile, b_tile, o_tile = bm * bk * in_bytes, bk * bn * wb, bm * bn
     if stat == "output":          # loops m>n>k : A refetched per n, B per m
         a_reads = tm * tn * tk * a_tile
         b_reads = tm * tn * tk * b_tile
@@ -275,20 +282,25 @@ def _mm_hbm_bytes(m: int, n: int, k: int, bm: int, bn: int, bk: int,
 
 
 def _sparsity_scales(sparsity_mode: str, act_density: float,
-                     wt_density: float, in_bytes: int
+                     wt_density: float, in_bytes: int,
+                     wt_bytes: Optional[int] = None
                      ) -> Tuple[float, float, float]:
     """(a_scale, b_scale, flop_scale) for a sparsity capability.
 
     ZVC-compressed fetches cost density + 1 bit/element bitmap (§IV); MACs
     scale with the surviving-pair fraction — wt_density for weight-sided
     skipping, act·wt (the expected CSB popcount of Fig 13) for two-sided.
+    The bitmap overhead is *relative to the operand's own element width*, so
+    an int8 weight (``wt_bytes=1``) pays 1/8 per element, not 1/16.
     """
-    bitmap = 1.0 / (8.0 * in_bytes)
+    wb = in_bytes if wt_bytes is None else wt_bytes
+    bitmap_a = 1.0 / (8.0 * in_bytes)
+    bitmap_b = 1.0 / (8.0 * wb)
     if sparsity_mode == "weight":
-        return 1.0, min(1.0, wt_density + bitmap), wt_density
+        return 1.0, min(1.0, wt_density + bitmap_b), wt_density
     if sparsity_mode == "two_sided":
-        return (min(1.0, act_density + bitmap),
-                min(1.0, wt_density + bitmap),
+        return (min(1.0, act_density + bitmap_a),
+                min(1.0, wt_density + bitmap_b),
                 act_density * wt_density)
     return 1.0, 1.0, 1.0
 
@@ -299,7 +311,8 @@ def select_matmul_schedule(m: int, n: int, k: int, *,
                            ic_p: int = 1,
                            sparsity_mode: str = "dense",
                            act_density: float = 1.0,
-                           wt_density: float = 1.0) -> MatmulSchedule:
+                           wt_density: float = 1.0,
+                           wt_bytes: Optional[int] = None) -> MatmulSchedule:
     """Pick (stationarity, bm, bn, bk) minimizing HBM traffic s.t. VMEM.
 
     This is FlexNN's per-layer schedule selection re-targeted at the TPU
@@ -310,10 +323,16 @@ def select_matmul_schedule(m: int, n: int, k: int, *,
     CSB skip fractions before the argmin, so a sparse weight tilts the choice
     away from weight-stationary reuse (the B operand is cheap to refetch when
     most of its blocks are dead) — the Flexagon/Eyeriss-v2 co-design point.
+
+    ``wt_bytes=1`` costs the weight operand at int8 width (the quantized
+    serving path): the B-fetch term and its bitmap overhead shrink together
+    with the ZVC density discount, so the selector ranks int8 × sparse
+    schedules by their *compounded* traffic.
     """
     best: Optional[MatmulSchedule] = None
+    wb = in_bytes if wt_bytes is None else wt_bytes
     a_scale, b_scale, flop_scale = _sparsity_scales(
-        sparsity_mode, act_density, wt_density, in_bytes)
+        sparsity_mode, act_density, wt_density, in_bytes, wb)
     blocks = (128, 256, 512, 1024)
     for stat in ("output", "weight", "input"):
         for bm in blocks:
@@ -326,19 +345,19 @@ def select_matmul_schedule(m: int, n: int, k: int, *,
                     if bk > k and bk != blocks[0]:
                         continue
                     cbm, cbn, cbk = min(bm, m), min(bn, n), min(bk, k)
-                    vmem = (cbm * cbk + cbk * cbn) * in_bytes * 2 \
+                    vmem = (cbm * cbk * in_bytes + cbk * cbn * wb) * 2 \
                         + cbm * cbn * 4           # dbl-buffered ins + f32 acc
                     if vmem > hw.vmem_bytes:
                         continue
                     bytes_ = _mm_hbm_bytes(m, n, -(-k // ic_p), cbm, cbn, cbk,
                                            stat, in_bytes, a_scale=a_scale,
-                                           b_scale=b_scale)
+                                           b_scale=b_scale, wt_bytes=wb)
                     if best is None or bytes_ < best.hbm_bytes:
                         best = MatmulSchedule(
                             stationarity=stat, bm=cbm, bn=cbn, bk=cbk,
                             ic_p=ic_p, hbm_bytes=bytes_,
                             flops=2.0 * m * n * k / ic_p * flop_scale,
-                            sparsity_mode=sparsity_mode)
+                            sparsity_mode=sparsity_mode, wt_bytes=wb)
     assert best is not None
     return best
 

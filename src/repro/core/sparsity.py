@@ -36,6 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.energy_model import zvc_weight_bytes
+from repro.quant.quantize import QuantizedLinear, dequantize_leaf
+
 
 # ---------------------------------------------------------------------------
 # 1. ZVC codec
@@ -344,12 +347,23 @@ class PlannedWeight:
     ``transpose`` marks leaves stored in the (N, K) orientation — the
     embedding-shaped ``lm_head`` (V, D) — whose metadata was compiled on the
     transposed view; ``w_kn`` is the contraction-oriented dense weight.
+
+    Quantized plans (compiled from a ``quant.QuantizedLinear`` tree) carry
+    the **int8 payload** in ``w`` and the per-output-channel f32 scales in
+    ``qscale`` (lead + (N,) — sliced per layer/expert by scan/vmap exactly
+    like the metadata).  Quantized payloads are always stored
+    contraction-oriented (``quantize_params`` transposes the lm_head at
+    quantization time), so ``transpose`` is False for them; dispatch scales
+    the f32 accumulator once per N-block in the kernel epilogue (scales are
+    K-invariant — exact), and ``w_kn`` dequantizes for the dense fallbacks.
     """
-    w: jax.Array          # (..., K, N) dense weight ((..., N, K) if transpose)
+    w: jax.Array          # (..., K, N) weight ((..., N, K) if transpose);
+    #                       int8 payload when ``qscale`` is set
     wkidx: jax.Array      # (..., tn, max_nnz) int32 — live K-blocks per
     #                       N-block column, ascending, zero-padded
     wkcnt: jax.Array      # (..., tn) int32 — live count per column
     b_bitmap: jax.Array   # (..., tk, tn) bool — weight block bitmap
+    qscale: Optional[jax.Array] = None   # (..., N) f32 dequant scales
     site: str = ""
     mode: str = "weight"  # weight | two_sided
     bm: int = 128
@@ -360,9 +374,17 @@ class PlannedWeight:
     transpose: bool = False   # w stored (..., N, K); metadata compiled on w.T
 
     @property
+    def quantized(self) -> bool:
+        return self.qscale is not None
+
+    @property
     def w_kn(self) -> jax.Array:
-        """Dense weight in the (..., K, N) contraction orientation."""
-        return jnp.swapaxes(self.w, -1, -2) if self.transpose else self.w
+        """Dense weight in the (..., K, N) contraction orientation
+        (dequantized for quantized plans)."""
+        w = jnp.swapaxes(self.w, -1, -2) if self.transpose else self.w
+        if self.qscale is not None:
+            w = w.astype(jnp.float32) * self.qscale[..., None, :]
+        return w
 
     def __rmatmul__(self, other):
         return other @ self.w_kn
@@ -382,7 +404,7 @@ class PlannedWeight:
 
 jax.tree_util.register_dataclass(
     PlannedWeight,
-    data_fields=("w", "wkidx", "wkcnt", "b_bitmap"),
+    data_fields=("w", "wkidx", "wkcnt", "b_bitmap", "qscale"),
     meta_fields=("site", "mode", "bm", "bk", "bn", "max_nnz", "tk",
                  "transpose"))
 
@@ -500,7 +522,31 @@ def plan_weight(w, *, site: str = "", mode: str = "weight",
     matching ``PlannedWeight.w_kn`` at dispatch).  ``max_nnz`` defaults to
     the tight bound over *all* slices, so the whole stack shares one static
     kernel grid.
+
+    A ``quant.QuantizedLinear`` input compiles the metadata on the
+    dequantized values (bitmaps are identical — quantization is
+    zero-preserving) and stores the int8 payload + scales in the
+    ``PlannedWeight``; quantized payloads are contraction-oriented, so
+    ``transpose`` must be False.
     """
+    if isinstance(w, QuantizedLinear):
+        if transpose:
+            raise ValueError(
+                "quantized weights are stored contraction-oriented "
+                "(quantize_params transposes at quantization time) — "
+                "plan them with transpose=False")
+        kn = np.asarray(dequantize_leaf(w, jnp.float32))
+        lead = kn.shape[:-2]
+        flat = kn.reshape((-1,) + kn.shape[-2:])
+        bmaps, tk, tn, site_nnz, wkidx, wkcnt = _compile_stack_meta(
+            flat, bk, bn, site, lead, cap=max_nnz)
+        return PlannedWeight(
+            w=w.q, qscale=w.scale,
+            wkidx=jnp.asarray(wkidx.reshape(lead + (tn, site_nnz))),
+            wkcnt=jnp.asarray(wkcnt.reshape(lead + (tn,))),
+            b_bitmap=jnp.asarray(bmaps.reshape(lead + (tk, tn))),
+            site=site, mode=mode, bm=bm, bk=bk, bn=bn,
+            max_nnz=int(site_nnz), tk=int(tk), transpose=False)
     w_np = np.asarray(w)
     kn = np.swapaxes(w_np, -1, -2) if transpose else w_np
     lead = kn.shape[:-2]
@@ -567,7 +613,22 @@ def _plannable_kn(leaf, site: str) -> Optional[Tuple[np.ndarray,
     leading axes: (L, K, N) dense/rec matmul families, 4-D (L, E, K, N) MoE
     expert tensors, or the bare (N, K) ``lm_head`` leaf (transposed here so
     the metadata matches the x @ headᵀ logits contraction).
+
+    ``QuantizedLinear`` leaves (a ``quantize_params`` tree) plan on their
+    dequantized values — quantization is zero-preserving, so the block
+    bitmaps are identical to the pre-quantization weight's.  Quantized
+    leaves are already contraction-oriented (incl. the lm_head, which
+    ``quantize_params`` transposed), so no transposition is applied.
     """
+    if isinstance(leaf, QuantizedLinear):
+        w = np.asarray(dequantize_leaf(leaf, jnp.float32))
+        if site in _TRANSPOSED_SITES:
+            if w.ndim != 2:
+                return None
+            return w[None], ()
+        if w.ndim not in (3, 4):
+            return None
+        return w.reshape((-1,) + w.shape[-2:]), w.shape[:-2]
     ndim = getattr(leaf, "ndim", 0)
     if site in _TRANSPOSED_SITES:
         if ndim != 2:
@@ -609,10 +670,18 @@ class SitePlan:
     block_density: float      # live weight-block fraction
     dense_bytes: int
     zvc_bytes: float
+    quantized: bool = False   # plan compiled from a QuantizedLinear leaf
+    int8_zvc_bytes: float = 0.0   # ZVC + int8 compounded storage (modeled
+    #                               for float plans, exact for quantized)
 
     @property
     def bytes_saved(self) -> float:
         return max(self.dense_bytes - self.zvc_bytes, 0.0)
+
+    @property
+    def bytes_saved_int8(self) -> float:
+        """Compounded ZVC+int8 saving vs the dense float weight."""
+        return max(self.dense_bytes - self.int8_zvc_bytes, 0.0)
 
     def stats(self) -> Dict[str, object]:
         out = {
@@ -626,6 +695,14 @@ class SitePlan:
             "dense_bytes": self.dense_bytes,
             "zvc_bytes": self.zvc_bytes,
             "bytes_saved": self.bytes_saved,
+            "quantized": self.quantized,
+            "int8_zvc_bytes": self.int8_zvc_bytes,
+            "bytes_saved_int8": self.bytes_saved_int8,
+            # the compounding headline: HBM weight bytes, sparse-only vs
+            # int8+sparse (≥1 when int8 helps; ~elem_bytes for f32/bf16)
+            "int8_vs_sparse_reduction": (
+                self.zvc_bytes / self.int8_zvc_bytes
+                if self.int8_zvc_bytes else 1.0),
         }
         if len(self.lead) > 1:        # expert leaf: per-expert economics
             ebm = self.zvc_bitmap
@@ -687,12 +764,24 @@ class WeightSparsityPlan:
                         f"weight's live blocks — it was compiled from "
                         f"different tensors; rebuild with "
                         f"compile_weight_plan on these params")
+            if isinstance(leaf, QuantizedLinear):
+                # int8 payload + per-channel scales ride the plan; quantized
+                # payloads are contraction-oriented, so never transposed
+                return PlannedWeight(
+                    w=leaf.q, qscale=leaf.scale,
+                    wkidx=jnp.asarray(e.wkidx), wkcnt=jnp.asarray(e.wkcnt),
+                    b_bitmap=jnp.asarray(e.b_bitmap),
+                    site=e.site, mode=e.mode, bm=e.bm, bk=e.bk, bn=e.bn,
+                    max_nnz=e.max_nnz, tk=e.tk, transpose=False)
             return PlannedWeight(
                 w=leaf, wkidx=jnp.asarray(e.wkidx),
                 wkcnt=jnp.asarray(e.wkcnt), b_bitmap=jnp.asarray(e.b_bitmap),
                 site=e.site, mode=e.mode, bm=e.bm, bk=e.bk, bn=e.bn,
                 max_nnz=e.max_nnz, tk=e.tk, transpose=e.transpose)
-        return jax.tree_util.tree_map_with_path(wrap, params)
+        # QuantizedLinear is itself a pytree node — stop the walk at it so
+        # its (q, scale) pair is wrapped as one planned leaf
+        return jax.tree_util.tree_map_with_path(
+            wrap, params, is_leaf=lambda x: isinstance(x, QuantizedLinear))
 
     def wt_densities(self) -> Dict[str, float]:
         """Measured per-site element density (size-weighted over entries) —
@@ -727,7 +816,8 @@ def measure_weight_densities(params, schedules) -> Dict[str, float]:
     """
     nnz: Dict[str, float] = {}
     size: Dict[str, float] = {}
-    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(
+            params, is_leaf=lambda x: isinstance(x, QuantizedLinear)):
         site = _site_for_path(_path_keys(path))
         if site is None or site not in schedules.sites:
             continue
@@ -736,14 +826,17 @@ def measure_weight_densities(params, schedules) -> Dict[str, float]:
             continue
         if _plannable_kn(leaf, site) is None:
             continue
-        w = np.asarray(leaf)
+        # int8 zeros are exact (zero-preserving quantization), so counting
+        # the payload's nonzeros measures the same density as the float tree
+        w = np.asarray(leaf.q if isinstance(leaf, QuantizedLinear) else leaf)
         nnz[site] = nnz.get(site, 0.0) + float(np.count_nonzero(w))
         size[site] = size.get(site, 0.0) + float(w.size)
     return {s: nnz[s] / size[s] for s in size if size[s]}
 
 
 def compile_weight_plan(params, schedules, *,
-                        max_nnz: Optional[Dict[str, int]] = None
+                        max_nnz: Optional[Dict[str, int]] = None,
+                        ref_elem_bytes: Optional[int] = None
                         ) -> WeightSparsityPlan:
     """Compile a :class:`WeightSparsityPlan` from the actual param tensors.
 
@@ -759,9 +852,20 @@ def compile_weight_plan(params, schedules, *,
     granularity.  ``max_nnz`` optionally caps a site's bound; a cap below
     the tightest feasible value raises ``ValueError`` naming the site and
     (slice, column) coordinates.
+
+    A **quantized** params tree (``quant.quantize_params`` output —
+    ``QuantizedLinear`` leaves) compiles the same metadata on the
+    dequantized values (bitmaps are unchanged: quantization is
+    zero-preserving) and marks each entry ``quantized``; ``attach`` then
+    stores the int8 payload + scales inside the ``PlannedWeight`` so the
+    fused dispatch dequantizes in the kernel epilogue.  ``ref_elem_bytes``
+    sets the dense-float reference for the byte economics (defaults to the
+    leaf's own itemsize, or 2 — bf16 — for quantized leaves whose original
+    dtype is no longer visible).
     """
     plan = WeightSparsityPlan(arch=schedules.arch, shape=schedules.shape)
-    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(
+            params, is_leaf=lambda x: isinstance(x, QuantizedLinear)):
         keys = _path_keys(path)
         site = _site_for_path(keys)
         if site is None or site not in schedules.sites:
@@ -779,14 +883,21 @@ def compile_weight_plan(params, schedules, *,
         bn = max(min(d.schedule.bn, n), 1)
         bmaps, tk, tn, site_nnz, wkidx, wkcnt = _compile_stack_meta(
             flat, bk, bn, site, lead, cap=(max_nnz or {}).get(site))
-        w = np.asarray(leaf)
+        quantized = isinstance(leaf, QuantizedLinear)
+        # ZVC on the values the dispatch actually consumes: the dequantized
+        # stack for quantized leaves (same bitmap as the int8 payload —
+        # zero-preserving), the raw leaf otherwise
+        w = (flat.reshape(tuple(lead) + flat.shape[-2:]) if quantized
+             else np.asarray(leaf))
         vals, ebm = zvc_encode_np(w)
-        elem_bytes = w.dtype.itemsize
+        elem_bytes = (ref_elem_bytes if ref_elem_bytes is not None
+                      else (2 if quantized else w.dtype.itemsize))
+        n_channels = flat.shape[0] * n     # output channels across the stack
         plan.entries["/".join(keys)] = SitePlan(
             path=keys, site=site, mode=d.sparsity_mode,
             bm=bm, bk=bk, bn=bn, tk=tk, tn=tn, max_nnz=site_nnz,
             lead=tuple(int(v) for v in lead),
-            transpose=site in _TRANSPOSED_SITES,
+            transpose=site in _TRANSPOSED_SITES and not quantized,
             wkidx=wkidx.reshape(lead + (tn, site_nnz)),
             wkcnt=wkcnt.reshape(lead + (tn,)),
             b_bitmap=bmaps.reshape(lead + (tk, tn)),
@@ -794,5 +905,10 @@ def compile_weight_plan(params, schedules, *,
             wt_density=float(vals.size) / max(w.size, 1),
             block_density=float(bmaps.mean()),
             dense_bytes=int(w.size * elem_bytes),
-            zvc_bytes=vals.size * elem_bytes + w.size / 8.0)
+            zvc_bytes=zvc_weight_bytes(w.size, vals.size,
+                                       elem_bytes=elem_bytes),
+            quantized=quantized,
+            int8_zvc_bytes=zvc_weight_bytes(w.size, vals.size,
+                                            quantized=True,
+                                            n_channels=n_channels))
     return plan

@@ -66,6 +66,32 @@ def _bs_kernel(kidx_ref, kcnt_ref, a_ref, b_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _bs_kernel_scaled(kidx_ref, kcnt_ref, a_ref, b_ref, s_ref, o_ref,
+                      acc_ref, *, max_nnz: int):
+    """The quantized variant: B tiles arrive int8 and are dequantized
+    in-register (cast only — the per-output-channel scales are K-invariant,
+    so the accumulator is scaled *once* at the final grid step, exactly the
+    ``int8_matmul`` epilogue trick).  HBM traffic for the weight is the
+    int8 payload: the ZVC skip and the int8 bytes compound.
+    """
+    i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    live = s < kcnt_ref[i, j]
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live)
+    def _mac():
+        acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.float32),
+                                b_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == max_nnz - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...][None, :]).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "max_nnz",
                                              "interpret", "out_dtype"))
 def _block_sparse_matmul(a, b, kidx, kcnt, *, bm, bn, bk, max_nnz,
@@ -102,13 +128,60 @@ def _block_sparse_matmul(a, b, kidx, kcnt, *, bm, bn, bk, max_nnz,
     )(kidx, jnp.maximum(kcnt, 1), a, b)
 
 
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "max_nnz",
+                                             "interpret", "out_dtype"))
+def _block_sparse_matmul_scaled(a, b, scale, kidx, kcnt, *, bm, bn, bk,
+                                max_nnz, interpret, out_dtype):
+    """Quantized twin of ``_block_sparse_matmul``: B is the int8 payload,
+    ``scale`` (N,) f32 rides its own (bn,)-blocked spec indexed by j and is
+    applied to the f32 accumulator at the final s step."""
+    m, k = a.shape
+    _, n = b.shape
+    tm, tn, tk = m // bm, n // bn, k // bk
+    grid = (tm, tn, max_nnz)
+
+    def a_map(i, j, s, kidx_ref, kcnt_ref):
+        return (i, kidx_ref[i, j, jnp.minimum(s, kcnt_ref[i, j] - 1)])
+
+    def b_map(i, j, s, kidx_ref, kcnt_ref):
+        return (kidx_ref[i, j, jnp.minimum(s, kcnt_ref[i, j] - 1)], j)
+
+    def s_map(i, j, s, kidx_ref, kcnt_ref):
+        return (j,)
+
+    def o_map(i, j, s, kidx_ref, kcnt_ref):
+        return (i, j)
+
+    return pl.pallas_call(
+        functools.partial(_bs_kernel_scaled, max_nnz=max_nnz),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), a_map),
+                pl.BlockSpec((bk, bn), b_map),
+                pl.BlockSpec((bn,), s_map),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), o_map),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(kidx, jnp.maximum(kcnt, 1), a, b, scale)
+
+
 def block_sparse_matmul(a: jax.Array, b: jax.Array, meta, *,
                         interpret: bool = False,
-                        out_dtype=None) -> jax.Array:
+                        out_dtype=None, scale=None) -> jax.Array:
     """C = A @ B skipping CSB-dead (A-block, B-block) pairs.
 
     Shapes must be divisible by the meta block sizes (the metadata builder
     padded its bitmaps; pad inputs the same way if needed).
+
+    ``scale`` (N,) f32 selects the quantized path: ``b`` is an int8
+    payload, dequantized in-register with the per-output-channel scales
+    applied once to the f32 accumulator in the kernel epilogue (exact —
+    scales are K-invariant).
     """
     tm, tk = meta.a_bitmap.shape
     _, tn = meta.b_bitmap.shape
@@ -118,6 +191,12 @@ def block_sparse_matmul(a: jax.Array, b: jax.Array, meta, *,
     assert bm * tm == m and bk * tk == k and bn * tn == n, \
         (a.shape, b.shape, meta.a_bitmap.shape, meta.b_bitmap.shape)
     out_dtype = out_dtype or a.dtype
+    if scale is not None:
+        assert scale.shape == (n,), (scale.shape, n)
+        return _block_sparse_matmul_scaled(
+            a, b, scale.astype(jnp.float32), meta.kidx, meta.kcnt,
+            bm=bm, bn=bn, bk=bk, max_nnz=meta.max_nnz,
+            interpret=interpret, out_dtype=out_dtype)
     return _block_sparse_matmul(
         a, b, meta.kidx, meta.kcnt, bm=bm, bn=bn, bk=bk,
         max_nnz=meta.max_nnz, interpret=interpret, out_dtype=out_dtype)

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparsity import PlannedWeight
+from repro.quant.quantize import QuantizedLinear
 
 _state = threading.local()
 
@@ -86,6 +87,10 @@ class ExecConfig:
     act_densities: Optional[Dict[str, float]] = None
     arch_cfg: Optional[object] = None
     model_shards: int = 1
+    # params were int8-quantized at bring-up (QuantizedLinear leaves /
+    # quantized PlannedWeight payloads); recorded so recalibration
+    # recompiles under the same weight-byte model
+    quantize: bool = False
 
 
 def _cfg() -> ExecConfig:
@@ -218,14 +223,19 @@ def _leading_flat(x: jax.Array):
 
 
 def _run_block_sparse(xp: jax.Array, wp: jax.Array, meta, cfg: ExecConfig,
-                      m: int, n: int) -> jax.Array:
-    """Shared kernel dispatch + unpad tail for both metadata sources."""
+                      m: int, n: int, scale=None) -> jax.Array:
+    """Shared kernel dispatch + unpad tail for both metadata sources.
+
+    ``scale`` (padded-N,) f32 selects the quantized epilogue: ``wp`` is an
+    int8 payload, dequantized inside the kernel (Pallas) or fused into the
+    masked dot (XLA) with the accumulator scaled once per N column.
+    """
     from repro.kernels import block_sparse as bs
     if cfg.use_pallas:
         out = bs.block_sparse_matmul(xp, wp, meta, interpret=cfg.interpret,
-                                     out_dtype=jnp.float32)
+                                     out_dtype=jnp.float32, scale=scale)
     else:
-        out = bs.block_sparse_matmul_ref(xp, wp, meta)
+        out = bs.block_sparse_matmul_ref(xp, wp, meta, scale=scale)
     return out[:m, :n]
 
 
@@ -265,11 +275,18 @@ def _planned_matmul(x2: jax.Array, pw: PlannedWeight,
     """(M, K) @ planned (K, N): weight-side metadata comes precompiled from
     the plan (ordinary jit inputs); only the activation bitmap is derived at
     trace time.  The kernel grid runs the plan's tight static ``max_nnz``.
+
+    Quantized plans keep the weight as the int8 payload end-to-end: the
+    block-sparse kernel fetches int8 tiles and the per-output-channel
+    scales are applied once to the f32 accumulator in the epilogue
+    (K-invariant scales — exact; `int8_matmul`'s trick on the sparse path).
     """
     from repro.core import sparsity as sparsity_lib
     from repro.kernels.flex_matmul import pad_to_blocks
 
-    w = pw.w_kn                       # (K, N) contraction orientation
+    # quantized plans: dispatch on the raw int8 payload (always stored
+    # contraction-oriented); float plans: dense (K, N) orientation
+    w = pw.w if pw.qscale is not None else pw.w_kn
     m, k = x2.shape
     n = w.shape[-1]
     xp = pad_to_blocks(x2, pw.bm, pw.bk)
@@ -286,7 +303,12 @@ def _planned_matmul(x2: jax.Array, pw: PlannedWeight,
     else:
         meta = sparsity_lib.weight_plan_meta(pw.wkidx, pw.wkcnt,
                                              pw.b_bitmap, tm)
-    return _run_block_sparse(xp, wp, meta, cfg, m, n)
+    scale = None
+    if pw.qscale is not None:
+        pad_n = wp.shape[1] - n
+        scale = (jnp.pad(pw.qscale, (0, pad_n)) if pad_n
+                 else pw.qscale).astype(jnp.float32)
+    return _run_block_sparse(xp, wp, meta, cfg, m, n, scale=scale)
 
 
 def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
@@ -315,6 +337,19 @@ def flex_matmul(x: jax.Array, w: jax.Array, *, site: str = "",
             return out.reshape(*lead, out.shape[-1]).astype(x.dtype)
         w = w.w_kn                     # plan disabled → dense fallback
     desc = _site_descriptor(site, cfg) if cfg.sparse_dispatch else None
+    if isinstance(w, QuantizedLinear):
+        # unplanned quantized leaf (e.g. plan-less bring-up, or a site the
+        # plan skipped): dense-Pallas 2-D sites run the fused int8 kernel;
+        # everything else dequantizes at trace time (XLA fuses the cast)
+        # and falls through to the ordinary dispatch below
+        if (cfg.use_pallas and w.q.ndim == 2 and x.ndim >= 2
+                and (desc is None or desc.sparsity_mode == "dense")):
+            from repro.kernels.int8_matmul import int8_matmul
+            x2, lead = _leading_flat(x)
+            out = int8_matmul(x2, w, interpret=cfg.interpret,
+                              out_dtype=jnp.float32)
+            return out.reshape(*lead, out.shape[-1]).astype(x.dtype)
+        w = (w.q.astype(jnp.float32) * w.scale[..., None, :]).astype(x.dtype)
     sparse = (desc is not None and w.ndim == 2
               and desc.sparsity_mode in ("weight", "two_sided"))
     if (sparse or cfg.use_pallas) and x.ndim >= 2:
@@ -342,10 +377,12 @@ def head_matmul(x: jax.Array, head, *, site: str = "lm_head",
 
     ``head`` is either the raw embedding-shaped (V, D) matrix (tied or
     unplanned configs — the transpose happens at trace time and fuses into
-    the dot) or a ``PlannedWeight`` compiled in the transposed (D, V)
-    orientation by ``core.sparsity.compile_weight_plan``.
+    the dot), a ``PlannedWeight`` compiled in the transposed (D, V)
+    orientation by ``core.sparsity.compile_weight_plan``, or a
+    ``QuantizedLinear`` — which ``quant.quantize_params`` already stores
+    contraction-oriented (q (D, V), per-vocab-row scales), so no swap.
     """
-    if isinstance(head, PlannedWeight):
+    if isinstance(head, (PlannedWeight, QuantizedLinear)):
         return flex_matmul(x, head, site=site, precision=precision)
     return flex_matmul(x, jnp.swapaxes(head, -1, -2), site=site,
                        precision=precision)
@@ -398,6 +435,11 @@ def flex_expert_matmul(x: jax.Array, w, *, site: str = "") -> jax.Array:
                                x, w, cfg)
             return out.astype(x.dtype)
         w = w.w_kn                     # plan disabled → dense fallback
+    if isinstance(w, QuantizedLinear):
+        # unplanned quantized expert stack: dequantize at trace time (the
+        # per-expert scale axis broadcasts against the last dim) and fall
+        # through — the scalar-prefetch kernel has no batched int8 variant
+        w = (w.q.astype(jnp.float32) * w.scale[..., None, :]).astype(x.dtype)
     desc = _site_descriptor(site, cfg) if cfg.sparse_dispatch else None
     sparse = (desc is not None and w.ndim == 3 and x.ndim == 3
               and x.shape[0] == w.shape[0]

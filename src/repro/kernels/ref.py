@@ -17,13 +17,19 @@ def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.dot(a, b, preferred_element_type=jnp.float32)
 
 
-def block_sparse_matmul_ref(a: jax.Array, b: jax.Array, meta) -> jax.Array:
+def block_sparse_matmul_ref(a: jax.Array, b: jax.Array, meta,
+                            scale: Optional[jax.Array] = None) -> jax.Array:
     """Oracle for the two-sided block-sparse matmul.
 
     Semantics: out tile (mi, ni) = Σ over the CSB-live K blocks of
     A[mi, k] @ B[k, ni].  Blocks outside the combined bitmap contribute
     exactly zero (they are *skipped*, not approximated), so when the bitmaps
     are exact (built from the data) this equals the dense product.
+
+    ``scale`` (N,) marks the quantized path (``b`` is an int8 payload):
+    the masked XLA twin of the Pallas scaled epilogue — dequant cast fused
+    into the dot, per-output-channel scales applied once to the f32
+    product (K-invariant, so scaling after the contraction is exact).
     """
     bm = a.shape[0] // meta.a_bitmap.shape[0]
     bk = a.shape[1] // meta.a_bitmap.shape[1]
@@ -34,6 +40,11 @@ def block_sparse_matmul_ref(a: jax.Array, b: jax.Array, meta) -> jax.Array:
     a_mask = jnp.repeat(jnp.repeat(meta.a_bitmap, bm, 0), bk, 1)
     b_mask = jnp.repeat(jnp.repeat(meta.b_bitmap, bk, 0), bn, 1)
     a_z = jnp.where(a_mask, a, 0).astype(a.dtype)
+    if scale is not None:
+        b_z = jnp.where(b_mask, b, 0).astype(jnp.float32)
+        out = jnp.dot(a_z.astype(jnp.float32), b_z,
+                      preferred_element_type=jnp.float32)
+        return out * scale.astype(jnp.float32)[None, :]
     b_z = jnp.where(b_mask, b, 0).astype(b.dtype)
     return jnp.dot(a_z, b_z, preferred_element_type=jnp.float32)
 

@@ -42,15 +42,21 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.sparsity import PlannedWeight
 from repro.kernels import ops
+from repro.quant.quantize import QuantizedLinear, dequantize_leaf
 from repro.sharding.partition import current_rules, shard
 
 Params = Dict[str, jax.Array]
 
 
 def _dense_w(w):
-    """Unwrap a PlannedWeight to its dense contraction-oriented array (for
-    paths that manage their own sharding/collectives, e.g. shard_map)."""
-    return w.w_kn if isinstance(w, PlannedWeight) else w
+    """Unwrap a PlannedWeight / QuantizedLinear to its dense
+    contraction-oriented array (for paths that manage their own
+    sharding/collectives, e.g. shard_map)."""
+    if isinstance(w, PlannedWeight):
+        return w.w_kn
+    if isinstance(w, QuantizedLinear):
+        return dequantize_leaf(w, jnp.float32)
+    return w
 
 
 def init_moe(cfg: ArchConfig, rng, dtype=jnp.bfloat16) -> Params:

@@ -128,6 +128,7 @@ def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
                        collect_stats: bool = False,
                        act_densities: Optional[Dict[str, float]] = None,
                        wt_densities: Optional[Dict[str, float]] = None,
+                       quantize: bool = False,
                        ) -> ops.ExecConfig:
     """ExecConfig carrying the decode-shape descriptor table for ``cfg``.
 
@@ -147,6 +148,13 @@ def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
     densities (e.g. an existing plan's ``wt_densities()``) when ``params``
     is not re-walked — a recalibration that knows the weights didn't
     change.
+
+    ``quantize`` int8-quantizes the matmul weights before planning
+    (``quant.quantize_params`` — deterministic, so the engine quantizing
+    the same params gets a bitwise-identical tree): schedules are costed at
+    1-byte weights, the plan compiles on the dequantized values
+    (quantization is zero-preserving → identical bitmaps) and carries the
+    int8 payloads + per-output-channel scales for fused dispatch.
     """
     from repro.core.descriptors import (compile_network_schedule,
                                         sparsity_mode_for)
@@ -156,21 +164,29 @@ def decode_exec_config(cfg: ArchConfig, n_slots: int, *,
                         global_batch=n_slots)
     ns = compile_network_schedule(cfg, shape, model_shards=model_shards,
                                   act_densities=act_densities,
-                                  wt_densities=wt_densities)
+                                  wt_densities=wt_densities,
+                                  quantize=quantize)
+    if quantize and params is not None:
+        from repro.quant.quantize import quantize_params
+        params, _ = quantize_params(params,
+                                    tie_embeddings=cfg.tie_embeddings)
     plan = None
     if params is not None and sparsity_mode_for(cfg) != "dense":
         measured = measure_weight_densities(params, ns)
         if measured:
             ns = compile_network_schedule(
                 cfg, shape, model_shards=model_shards,
-                wt_densities=measured, act_densities=act_densities)
-            plan = compile_weight_plan(params, ns)
+                wt_densities=measured, act_densities=act_densities,
+                quantize=quantize)
+            plan = compile_weight_plan(
+                params, ns, ref_elem_bytes=2 if quantize else None)
     return ops.ExecConfig(use_pallas=use_pallas, interpret=interpret,
                           schedules=ns, plan=plan,
                           collect_stats=collect_stats,
                           act_densities=(dict(act_densities)
                                          if act_densities else None),
-                          arch_cfg=cfg, model_shards=model_shards)
+                          arch_cfg=cfg, model_shards=model_shards,
+                          quantize=quantize)
 
 
 def activation_density_drift(baseline: Optional[Dict[str, float]],
@@ -368,7 +384,8 @@ class ServeEngine:
                  eos_id: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  async_dispatch: bool = True,
-                 admission: Optional[AdmissionPolicy] = None):
+                 admission: Optional[AdmissionPolicy] = None,
+                 quantize: bool = False):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.exec_cfg = exec_cfg
@@ -404,14 +421,33 @@ class ServeEngine:
         self.queue: Deque[Request] = collections.deque()
         self._uid = 0
         self._mask_cache: Dict[tuple, jax.Array] = {}
+        # int8 bring-up: quantize the matmul weights once here; the served
+        # tree (``_serve_params``) carries QuantizedLinear leaves that the
+        # plan attaches onto / the dispatch falls back on.  ``self.params``
+        # keeps the original tree for plan rebuilds — quantize_params is
+        # deterministic, so a rebuild re-quantizing it reproduces
+        # ``_serve_params`` bitwise and attach verification stays valid.
+        # An exec config built by decode_exec_config(quantize=True) implies
+        # the knob even if the caller forgot it (the plan's payloads are
+        # int8 — attaching them onto a bf16 tree would be incoherent).
+        self.quantize = bool(quantize) or bool(getattr(exec_cfg, "quantize",
+                                                       False))
+        if self.quantize:
+            from repro.quant.quantize import quantize_params
+            self._serve_params, self.quant_stats = quantize_params(
+                params, tie_embeddings=cfg.tie_embeddings)
+        else:
+            self._serve_params, self.quant_stats = params, None
         # weight-plan bring-up: attach precompiled CSB metadata into the
         # params pytree so the jitted step gets it as ordinary arrays.
         # verify_plan=False skips the coverage re-check (an extra
         # O(all-weights) host pass) when the plan was just compiled from
         # these exact params
         self.plan = getattr(exec_cfg, "plan", None)
-        self._exec_params = (self.plan.attach(params, verify=verify_plan)
-                             if self.plan is not None else params)
+        self._exec_params = (self.plan.attach(self._serve_params,
+                                              verify=verify_plan)
+                             if self.plan is not None
+                             else self._serve_params)
         self._stats = (ops.SparsityStatsCollector()
                        if exec_cfg is not None and exec_cfg.collect_stats
                        else None)
@@ -592,7 +628,7 @@ class ServeEngine:
                 model_shards=old.model_shards,
                 use_pallas=old.use_pallas, interpret=old.interpret,
                 collect_stats=old.collect_stats,
-                act_densities=measured,
+                act_densities=measured, quantize=old.quantize,
                 wt_densities=(self.plan.wt_densities()
                               if self.plan is not None and self.plan.entries
                               else None))
@@ -617,11 +653,11 @@ class ServeEngine:
                     model_shards=old.model_shards,
                     use_pallas=old.use_pallas, interpret=old.interpret,
                     params=self.params, collect_stats=old.collect_stats,
-                    act_densities=measured)
+                    act_densities=measured, quantize=old.quantize)
                 self.plan = self.exec_cfg.plan
                 self._exec_params = (
-                    self.plan.attach(self.params, verify=False)
-                    if self.plan is not None else self.params)
+                    self.plan.attach(self._serve_params, verify=False)
+                    if self.plan is not None else self._serve_params)
             self._build_executables()
         return measured
 
