@@ -441,6 +441,137 @@ def bench_quantized_engine(wt_sparsity: float, arch: str = "stablelm-1.6b",
     return out
 
 
+def _spec_lm_config() -> ArchConfig:
+    """A 2-layer compute-dominated profile: big enough that the matmul
+    stream (not host dispatch) sets the step time, so a draft tier doing
+    ``max_nnz/tk`` of the weight work is visibly cheaper per step — the
+    regime where self-speculation through the fused loop pays."""
+    return ArchConfig(name="spec-lm", family="dense", n_layers=2,
+                      d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+                      vocab=1024, norm="rmsnorm")
+
+
+def _concentrate_blocks(params, decay: float, band: int):
+    """50% block-prune, then scale every K-band of the planned matmul
+    weights by ``decay**i`` — block-energy-concentrated weights, the regime
+    tier pruning targets: each column's top-``max_nnz`` K-blocks carry
+    ~all of its mass, so a pruned draft tier greedy-agrees with the full
+    plan at high rate.  ``band`` must match the plan's ``bk`` so the decay
+    ranking is the ranking tier pruning sees.  The lm_head leaf is stored
+    (V, D): its contraction axis is the last one."""
+    planned = ("attn", "mlp", "lm_head")
+
+    def f(path, x):
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if not any(t in k for t in planned for k in keys):
+            return x
+        if x.ndim < 2 or min(x.shape[-2:]) < band:
+            return x
+        x = prune_stacked_magnitude(x, 0.5, block=(16, 16))
+        kax = -1 if any("lm_head" in k for k in keys) else -2
+        k = x.shape[kax]
+        fac = (decay ** np.arange((k + band - 1) // band)).repeat(band)[:k]
+        shape = [1] * x.ndim
+        shape[kax] = k
+        return (x * jnp.asarray(fac, x.dtype).reshape(shape)).astype(x.dtype)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def bench_speculative_engine(quick: bool = False) -> Dict[str, object]:
+    """Self-speculative decoding through the fused serve loop, spec vs
+    non-spec fused engine on two profiles:
+
+      * ``edge_tiny`` — overhead-bound: every step costs the same few host
+        microseconds regardless of tier, so speculation's extra verify
+        forward can only lose.  Reported honestly, not asserted as a win.
+      * ``spec_lm`` — compute-dominated with block-energy-concentrated
+        weights: the pruned draft tier streams ``max_nnz/tk`` of the
+        weight bytes per step (gather dispatch) and the windowed verify
+        scores k+1 positions in one forward, so accepted windows convert
+        draft savings into end-to-end tokens/sec.  This is the asserted
+        win profile.
+
+    Both engines must emit token-for-token identical greedy streams —
+    speculation is exact by construction (rejected drafts are replaced by
+    the full plan's tokens), and the bench re-checks it on every wave.
+    """
+    from repro.core.sparsity import compile_weight_plan
+
+    out: Dict[str, object] = {}
+
+    def one(cfg, params, ec, ratios, k, decode_block, max_new,
+            n_req=4, prompt_len=4, reps=2):
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(1, cfg.vocab - 1,
+                                size=prompt_len).astype(np.int32)
+                   for _ in range(n_req)]
+        kw = dict(n_slots=n_req, max_seq=max_new + prompt_len + 8,
+                  exec_cfg=ec, decode_block=decode_block, eos_id=None)
+        base = ServeEngine(cfg, params, **kw)
+        spec = ServeEngine(cfg, params, plan_tiers=ratios, speculate_k=k,
+                           **kw)
+        _drain_tps(base, prompts, max_new)             # warm the jits
+        _drain_tps(spec, prompts, max_new)
+        tb = ts = 0.0
+        match = True
+        for _ in range(reps):
+            t0, s0 = _drain_tps(base, prompts, max_new)
+            t1, s1 = _drain_tps(spec, prompts, max_new)
+            tb, ts = max(tb, t0), max(ts, t1)
+            match = match and (s0 == s1)
+        st = spec.spec_stats
+        return {
+            "config": {"arch": cfg.name, "plan_tiers": list(ratios),
+                       "speculate_k": k, "decode_block": decode_block,
+                       "n_req": n_req, "max_new": max_new},
+            "tokens_per_s": {"fused": tb, "speculative": ts},
+            "speedup": ts / tb,
+            "acceptance_rate": spec.speculative_acceptance(),
+            "drafted": int(st["drafted"]),
+            "emitted": int(st["emitted"]),
+            "verify_blocks": int(st["verify_blocks"]),
+            # tokens landed per dispatched verify block, summed across its
+            # live rows (≤ (k+1)·n_req): the speculative depth paying off
+            "tokens_per_verify_block": (st["emitted"] / st["verify_blocks"]
+                                        if st["verify_blocks"] else 0.0),
+            "draft_tokens_per_emitted": (st["drafted"] / st["emitted"]
+                                         if st["emitted"] else 0.0),
+            "streams_match_fused": bool(match),
+        }
+
+    # ---- edge_tiny: the honest overhead-bound datapoint ----
+    # weight-only sparsity: speculation auto-disables on two_sided configs
+    # (windowed verify is not bitwise-stable there — see serve.engine)
+    cfg_e = _edge_tiny_config()
+    params_e = _prune_stack(model_lib.init_params(
+        cfg_e, jax.random.PRNGKey(0), dtype=jnp.float32), 0.5)
+    sp_e = dataclasses.replace(cfg_e, sparsity=SparsityConfig(
+        weight_sparsity=0.5, activation_threshold=0.0))
+    ec_e = decode_exec_config(sp_e, n_slots=4, params=params_e)
+    out["edge_tiny"] = one(sp_e, params_e, ec_e, (0.0, 0.75), 3,
+                           decode_block=16, max_new=32 if quick else 56)
+
+    # ---- spec_lm: the compute-dominated win profile ----
+    cfg_s = _spec_lm_config()
+    sp_s = dataclasses.replace(cfg_s, sparsity=SparsityConfig(
+        weight_sparsity=0.5, activation_threshold=0.0))
+    ec_s = decode_exec_config(sp_s, n_slots=4)          # schedules only
+    bk = 32                                             # fine K granularity:
+    ns = ec_s.schedules                                 # tk=16 per d_model
+    for site, d in list(ns.sites.items()):              # contraction
+        ns.sites[site] = dataclasses.replace(
+            d, schedule=dataclasses.replace(d.schedule, bk=bk))
+    params_s = _concentrate_blocks(model_lib.init_params(
+        sp_s, jax.random.PRNGKey(0), dtype=jnp.float32),
+        decay=0.15, band=bk)
+    plan = compile_weight_plan(params_s, ns)
+    ec_s = dataclasses.replace(ec_s, plan=plan)
+    out["spec_lm"] = one(sp_s, params_s, ec_s, (0.0, 0.75), 5,
+                         decode_block=16, max_new=32 if quick else 48)
+    return out
+
+
 def bench_recalibration_after_fused(wt_sparsity: float) -> Dict[str, object]:
     """Popcount feedback + ``maybe_recalibrate`` stay functional after a
     fused run — the collect_stats callbacks fire from inside the scanned
@@ -708,6 +839,20 @@ def run(out_path: str, verbose: bool = True,
               f"tok/s sparse={qt['sparse']:.0f} "
               f"int8_sparse={qt['int8_sparse']:.0f}  "
               f"tokens match oracle: {q8['tokens_match_dequant_oracle']}")
+    # speculative engine: elastic plan tiers + self-speculative decode —
+    # tokens/sec spec vs non-spec fused with the acceptance rate, part of
+    # --quick so CI asserts the win profile from this PR onward
+    sv = bench_speculative_engine(quick)
+    report["speculative_engine"] = sv
+    if verbose:
+        for pname, r in sv.items():
+            tp = r["tokens_per_s"]
+            print(f"spec[{pname}]: fused={tp['fused']:.0f} tok/s "
+                  f"spec={tp['speculative']:.0f} tok/s "
+                  f"speedup={r['speedup']:.2f}x "
+                  f"accept={r['acceptance_rate']:.3f} "
+                  f"tok/verify_block={r['tokens_per_verify_block']:.2f} "
+                  f"streams_match={r['streams_match_fused']}")
     lg = bench_serve_loadgen(quick=quick)
     report["serve_load"] = lg
     if verbose:
@@ -824,6 +969,26 @@ def validate(report: Dict[str, object]) -> list:
         if not q8.get("tokens_match_dequant_oracle"):
             failures.append("int8: quantized fused stream diverged from "
                             "the dequantized-dense oracle")
+    sv = report.get("speculative_engine", {})
+    if not sv:
+        failures.append("no speculative-engine section in the report")
+    else:
+        for pname, r in sv.items():
+            if not r.get("streams_match_fused"):
+                failures.append(f"spec[{pname}]: speculative stream "
+                                f"diverged from the non-speculative fused "
+                                f"engine")
+            if "acceptance_rate" not in r:
+                failures.append(f"spec[{pname}]: no acceptance rate "
+                                f"reported")
+        # the win claim: on at least one profile the speculative engine
+        # must beat the non-speculative fused engine on tokens/sec
+        # (spec_lm is the designed win; edge_tiny is the honest
+        # overhead-bound datapoint and may lose)
+        if not any(r.get("speedup", 0.0) > 1.0 for r in sv.values()):
+            failures.append(
+                f"speculative engine beat the fused engine on no profile: "
+                f"{ {p: round(r.get('speedup', 0.0), 3) for p, r in sv.items()} }")
     lg = report.get("serve_load", {})
     if not lg:
         failures.append("no load-generator section in the report")

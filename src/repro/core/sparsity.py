@@ -317,6 +317,33 @@ def prune_k_blocks(w: np.ndarray, bk: int, bn: int,
                                                      tn * bn)[:k, :n]
 
 
+def tier_max_live(tk: int, ratio: float) -> int:
+    """Live K-block cap for a pruning ``ratio`` over ``tk`` K-blocks.
+
+    ``max(tk - floor(ratio * tk), 1)`` — monotone non-increasing in
+    ``ratio`` (floor is monotone), ``tk`` at ratio 0 (no-op), never below
+    one live block per output column.  Together with ``prune_k_blocks``'s
+    *stable* argsort this gives the tier invariant speculative acceptance
+    depends on: a higher ratio keeps a strict prefix of a lower ratio's
+    keep-order, so its live set is a subset (test-enforced).
+    """
+    return max(tk - int(ratio * tk + 1e-9), 1)
+
+
+def _prune_stack_blocks(flat: np.ndarray, bk: int, bn: int,
+                        ratio: float) -> np.ndarray:
+    """Apply ``prune_k_blocks`` at ``ratio`` to every slice of a (P, K, N)
+    stack.  Metadata-side only: callers compile tier bitmaps from the
+    result while the stored payload stays the unpruned weight."""
+    _, k, _ = flat.shape
+    tk = -(-k // bk)
+    max_live = tier_max_live(tk, ratio)
+    if max_live >= tk:
+        return flat
+    return np.stack([prune_k_blocks(flat[i], bk, bn, max_live)
+                     for i in range(flat.shape[0])])
+
+
 def relu_activation_bitmap(x: jax.Array, threshold: float = 0.0) -> jax.Array:
     """Activation bitmap after thresholding (§II-B ReLU-induced sparsity)."""
     return jnp.abs(x) > threshold
@@ -364,6 +391,11 @@ class PlannedWeight:
     wkcnt: jax.Array      # (..., tn) int32 — live count per column
     b_bitmap: jax.Array   # (..., tk, tn) bool — weight block bitmap
     qscale: Optional[jax.Array] = None   # (..., N) f32 dequant scales
+    wgather: Optional[jax.Array] = None  # (..., tn, max_nnz, bk, bn) —
+    #                       compacted live-block payload, materialized once
+    #                       at attach time for pruned (gather) tiers so the
+    #                       XLA draft dispatch reads only max_nnz/tk of the
+    #                       weight bytes per step; padded slots pre-zeroed
     site: str = ""
     mode: str = "weight"  # weight | two_sided
     bm: int = 128
@@ -372,6 +404,14 @@ class PlannedWeight:
     max_nnz: int = 1      # tight static bound: max live K-blocks (≤ tk)
     tk: int = 1           # dense K-block count (the trace-time upper bound)
     transpose: bool = False   # w stored (..., N, K); metadata compiled on w.T
+    gather: bool = False  # pruned-tier leaf: the XLA fallback may dispatch
+    #                       through the gathered-block path (max_nnz-
+    #                       proportional FLOPs/bytes, block-sum reassociated
+    #                       → not bitwise vs the masked dense dot).  Set only
+    #                       for prune_ratio>0 tiers, whose output is either
+    #                       re-verified token-by-token (speculative draft) or
+    #                       explicitly accuracy-relaxed (latency classes);
+    #                       the full plan keeps the bit-exact masked path.
 
     @property
     def quantized(self) -> bool:
@@ -404,9 +444,9 @@ class PlannedWeight:
 
 jax.tree_util.register_dataclass(
     PlannedWeight,
-    data_fields=("w", "wkidx", "wkcnt", "b_bitmap", "qscale"),
+    data_fields=("w", "wkidx", "wkcnt", "b_bitmap", "qscale", "wgather"),
     meta_fields=("site", "mode", "bm", "bk", "bn", "max_nnz", "tk",
-                 "transpose"))
+                 "transpose", "gather"))
 
 
 def weight_side_lists(b_bitmap: np.ndarray,
@@ -673,6 +713,9 @@ class SitePlan:
     quantized: bool = False   # plan compiled from a QuantizedLinear leaf
     int8_zvc_bytes: float = 0.0   # ZVC + int8 compounded storage (modeled
     #                               for float plans, exact for quantized)
+    prune_ratio: float = 0.0  # tier pruning ratio the metadata was compiled
+    #                           at (0 = the full plan); the payload is never
+    #                           pruned — only the bitmap/index lists shrink
 
     @property
     def bytes_saved(self) -> float:
@@ -696,6 +739,7 @@ class SitePlan:
             "zvc_bytes": self.zvc_bytes,
             "bytes_saved": self.bytes_saved,
             "quantized": self.quantized,
+            "prune_ratio": self.prune_ratio,
             "int8_zvc_bytes": self.int8_zvc_bytes,
             "bytes_saved_int8": self.bytes_saved_int8,
             # the compounding headline: HBM weight bytes, sparse-only vs
@@ -717,6 +761,40 @@ class SitePlan:
         return out
 
 
+def _tier_gather_payload(e: "SitePlan", leaf) -> jax.Array:
+    """Compacted live-block payload for a pruned (gather) tier.
+
+    Gathers each output column's ≤ ``max_nnz`` live K-blocks into a dense
+    (tn, max_nnz, bk, bn) buffer (per lead slice), padded slots zeroed —
+    the one-off bring-up pass that lets the XLA draft dispatch stream only
+    ``max_nnz / tk`` of the weight bytes per decode step instead of
+    re-gathering (or worse, masking the full dense weight) every call.
+    Quantized tiers compact the raw int8 payload; scales stay per-channel.
+    """
+    if isinstance(leaf, QuantizedLinear):
+        w = np.asarray(leaf.q)
+    else:
+        w = np.asarray(leaf)
+        if e.transpose:
+            w = np.swapaxes(w, -1, -2)
+    k, n = w.shape[-2:]
+    lead = w.shape[:-2]
+    kp, npad = e.tk * e.bk, e.tn * e.bn
+    wflat = w.reshape((-1, k, n))
+    idx = e.wkidx.reshape((-1, e.tn, e.max_nnz))
+    cnt = e.wkcnt.reshape((-1, e.tn))
+    out = np.zeros((wflat.shape[0], e.tn, e.max_nnz, e.bk, e.bn), w.dtype)
+    for s in range(wflat.shape[0]):
+        wp = np.zeros((kp, npad), w.dtype)
+        wp[:k, :n] = wflat[s]
+        wb = wp.reshape(e.tk, e.bk, e.tn, e.bn)
+        for q in range(e.tn):
+            c = int(cnt[s, q])
+            if c:
+                out[s, q, :c] = wb[idx[s, q, :c], :, q, :]
+    return jnp.asarray(out.reshape(lead + (e.tn, e.max_nnz, e.bk, e.bn)))
+
+
 @dataclass
 class WeightSparsityPlan:
     """Per-site precompiled weight metadata for a whole network.
@@ -730,6 +808,7 @@ class WeightSparsityPlan:
     arch: str = ""
     shape: str = ""
     entries: Dict[str, SitePlan] = field(default_factory=dict)
+    prune_ratio: float = 0.0   # tier ratio all entries were compiled at
 
     def attach(self, params, *, verify: bool = True):
         """Wrap every planned weight leaf in ``params`` as PlannedWeight.
@@ -739,6 +818,20 @@ class WeightSparsityPlan:
         of the same shape would otherwise silently skip live MACs.  A
         strictly conservative plan (extra live bits) is allowed: the kernel
         then MACs some zero blocks but stays exact.
+
+        A **pruned tier** (``prune_ratio > 0``) inverts the check: skipping
+        live blocks is the point (the accuracy/latency trade), so the
+        planned set must instead be a *subset* of the attached weight's
+        live blocks — a live planned block over a dead weight block means
+        the plan was compiled from different tensors.
+
+        Attaching copies no weight data: every ``PlannedWeight`` references
+        the leaf arrays of ``params`` (int8 payload included), so N tiers
+        attached to one param tree share one HBM-resident weight set.
+        Exception: pruned (``gather``) tiers additionally materialize a
+        compacted ``wgather`` payload — ~``max_nnz/tk`` of the site's
+        bytes — so draft decode steps stream only live blocks; the dense
+        ``w`` leaf itself is still the shared reference.
         """
         def wrap(path, leaf):
             key = "/".join(_path_keys(path))
@@ -758,12 +851,21 @@ class WeightSparsityPlan:
                 live = np.stack([block_bitmap(flat[i], e.bk, e.bn)
                                  for i in range(flat.shape[0])])
                 planned = e.b_bitmap.reshape((-1,) + e.b_bitmap.shape[-2:])
-                if not np.all(planned | ~live):
+                if e.prune_ratio:
+                    ok = np.all(~planned | live)       # planned ⊆ live
+                    why = ("pruned-tier plan marks blocks live that are "
+                           "dead in the attached weight")
+                else:
+                    ok = np.all(planned | ~live)       # live ⊆ planned
+                    why = ("plan does not cover the attached weight's "
+                           "live blocks")
+                if not ok:
                     raise ValueError(
-                        f"{key} [{e.site}]: plan does not cover the attached "
-                        f"weight's live blocks — it was compiled from "
+                        f"{key} [{e.site}]: {why} — it was compiled from "
                         f"different tensors; rebuild with "
                         f"compile_weight_plan on these params")
+            gather = bool(e.prune_ratio)
+            wg = _tier_gather_payload(e, leaf) if gather else None
             if isinstance(leaf, QuantizedLinear):
                 # int8 payload + per-channel scales ride the plan; quantized
                 # payloads are contraction-oriented, so never transposed
@@ -772,12 +874,14 @@ class WeightSparsityPlan:
                     wkidx=jnp.asarray(e.wkidx), wkcnt=jnp.asarray(e.wkcnt),
                     b_bitmap=jnp.asarray(e.b_bitmap),
                     site=e.site, mode=e.mode, bm=e.bm, bk=e.bk, bn=e.bn,
-                    max_nnz=e.max_nnz, tk=e.tk, transpose=False)
+                    max_nnz=e.max_nnz, tk=e.tk, transpose=False,
+                    gather=gather, wgather=wg)
             return PlannedWeight(
                 w=leaf, wkidx=jnp.asarray(e.wkidx),
                 wkcnt=jnp.asarray(e.wkcnt), b_bitmap=jnp.asarray(e.b_bitmap),
                 site=e.site, mode=e.mode, bm=e.bm, bk=e.bk, bn=e.bn,
-                max_nnz=e.max_nnz, tk=e.tk, transpose=e.transpose)
+                max_nnz=e.max_nnz, tk=e.tk, transpose=e.transpose,
+                gather=gather, wgather=wg)
         # QuantizedLinear is itself a pytree node — stop the walk at it so
         # its (q, scale) pair is wrapped as one planned leaf
         return jax.tree_util.tree_map_with_path(
@@ -836,7 +940,8 @@ def measure_weight_densities(params, schedules) -> Dict[str, float]:
 
 def compile_weight_plan(params, schedules, *,
                         max_nnz: Optional[Dict[str, int]] = None,
-                        ref_elem_bytes: Optional[int] = None
+                        ref_elem_bytes: Optional[int] = None,
+                        prune_ratio: float = 0.0
                         ) -> WeightSparsityPlan:
     """Compile a :class:`WeightSparsityPlan` from the actual param tensors.
 
@@ -862,8 +967,21 @@ def compile_weight_plan(params, schedules, *,
     sets the dense-float reference for the byte economics (defaults to the
     leaf's own itemsize, or 2 — bf16 — for quantized leaves whose original
     dtype is no longer visible).
+
+    ``prune_ratio`` compiles a **pruned tier**: each site's metadata is
+    built as if ``prune_k_blocks`` had dropped the lowest-L2 fraction of
+    K-blocks per output column (cap = ``tier_max_live(tk, ratio)``), but
+    the *payload is untouched* — pruning lives entirely in the bitmap and
+    index lists the kernel gathers by, so a tier attaches to the same
+    weight arrays as the full plan.  ``wt_density``/``block_density``
+    report the tier's *effective* (dispatched) density, while the ZVC byte
+    economics keep describing the shared stored payload.  At ratio 0 the
+    compiled plan is bitwise-identical to the default (test-enforced).
     """
-    plan = WeightSparsityPlan(arch=schedules.arch, shape=schedules.shape)
+    if not 0.0 <= prune_ratio < 1.0:
+        raise ValueError(f"prune_ratio must be in [0, 1), got {prune_ratio}")
+    plan = WeightSparsityPlan(arch=schedules.arch, shape=schedules.shape,
+                              prune_ratio=float(prune_ratio))
     for path, leaf in jax.tree_util.tree_leaves_with_path(
             params, is_leaf=lambda x: isinstance(x, QuantizedLinear)):
         keys = _path_keys(path)
@@ -881,8 +999,12 @@ def compile_weight_plan(params, schedules, *,
         bm = max(min(d.schedule.bm, d.m), 1)
         bk = max(min(d.schedule.bk, k), 1)
         bn = max(min(d.schedule.bn, n), 1)
+        # a pruned tier compiles its metadata from the block-pruned view of
+        # the stack; the stored payload (and its ZVC economics) stay raw
+        flat_meta = (flat if not prune_ratio
+                     else _prune_stack_blocks(flat, bk, bn, prune_ratio))
         bmaps, tk, tn, site_nnz, wkidx, wkcnt = _compile_stack_meta(
-            flat, bk, bn, site, lead, cap=(max_nnz or {}).get(site))
+            flat_meta, bk, bn, site, lead, cap=(max_nnz or {}).get(site))
         quantized = isinstance(leaf, QuantizedLinear)
         # ZVC on the values the dispatch actually consumes: the dequantized
         # stack for quantized leaves (same bitmap as the int8 payload —
@@ -902,8 +1024,12 @@ def compile_weight_plan(params, schedules, *,
             wkcnt=wkcnt.reshape(lead + (tn,)),
             b_bitmap=bmaps.reshape(lead + (tk, tn)),
             zvc_values=vals, zvc_bitmap=ebm,
-            wt_density=float(vals.size) / max(w.size, 1),
+            # effective (dispatched) density: what the kernel MACs under
+            # this tier's metadata, not what the shared payload stores
+            wt_density=(float(np.count_nonzero(flat_meta))
+                        / max(flat_meta.size, 1)),
             block_density=float(bmaps.mean()),
+            prune_ratio=float(prune_ratio),
             dense_bytes=int(w.size * elem_bytes),
             zvc_bytes=zvc_weight_bytes(w.size, vals.size,
                                        elem_bytes=elem_bytes),
@@ -912,3 +1038,31 @@ def compile_weight_plan(params, schedules, *,
                                             quantized=True,
                                             n_channels=n_channels))
     return plan
+
+
+def compile_plan_tiers(params, schedules, ratios=(0.0, 0.5), *,
+                       max_nnz: Optional[Dict[str, int]] = None,
+                       ref_elem_bytes: Optional[int] = None
+                       ) -> list:
+    """Compile N elastic plan tiers from one param set.
+
+    One :class:`WeightSparsityPlan` per pruning ratio (non-decreasing,
+    conventionally starting at 0.0 = the full/verify tier), all over the
+    *same* ``schedules`` so every tier shares block granularity — and,
+    after ``attach``, the same weight arrays (int8 payload included): a
+    tier is pure metadata, so tiers attach/detach without copying weights.
+
+    Tier invariants (property-tested): a higher ratio's live blocks are a
+    subset of any lower ratio's (``prune_k_blocks``'s stable keep-order),
+    with a tighter-or-equal ``max_nnz``; the ratio-0 tier is
+    bitwise-identical to ``compile_weight_plan``'s default output.
+    """
+    rs = [float(r) for r in ratios]
+    if not rs:
+        raise ValueError("compile_plan_tiers needs at least one ratio")
+    if any(b < a for a, b in zip(rs, rs[1:])):
+        raise ValueError(f"tier ratios must be non-decreasing, got {rs}")
+    return [compile_weight_plan(params, schedules, max_nnz=max_nnz,
+                                ref_elem_bytes=ref_elem_bytes,
+                                prune_ratio=r)
+            for r in rs]

@@ -283,6 +283,48 @@ def decode_step(p: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
     return out, {"k": k, "v": v}
 
 
+def decode_window(p: Params, cfg: ArchConfig, x: jax.Array, cache: Params,
+                  pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """W-position batched decode — the speculative-verify scorer.
+
+    x (B, W, D) holds W consecutive tokens per row, ``pos`` (B,) the
+    sequence position of each row's *first* window token.  Full-length
+    caches only (``cfg.window == 0``): all W K/V pairs are scattered into
+    the cache first, then every query attends the whole cache under a
+    per-(row, query) validity mask ``idx <= pos + i`` — causal over the
+    prefix *and* within the window (query i sees keys ≤ its own position,
+    which were just written).  One forward scores W positions for the cost
+    of one batched attention instead of W sequential steps.
+
+    Rows whose positions are stale (inactive rows riding the batch) write
+    garbage K/V at their clamped slots; callers mask those rows out of the
+    state commit (``model.verify_window``), so the garbage never lands.
+    """
+    b, w, _ = x.shape
+    hd = cfg.head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    posw = pos[:, None] + jnp.arange(w, dtype=jnp.int32)[None]   # (B, W)
+    qf = q.reshape(b, w, cfg.n_heads, hd)
+    qf = rope.apply_rope(qf, posw, kind=cfg.rope, theta=cfg.rope_theta)
+    q = qf.reshape(q.shape)
+    k_new = rope.apply_rope(k_new, posw, kind=cfg.rope, theta=cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slots = jnp.minimum(posw, size - 1)
+    rows = jnp.arange(b)[:, None]
+    k = cache["k"].at[rows, slots].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slots].set(v_new.astype(cache["v"].dtype))
+    k = shard(k, "cache_batch", "cache_seq", None, None)
+    v = shard(v, "cache_batch", "cache_seq", None, None)
+
+    idx = jnp.arange(size)
+    valid = idx[None, None, :] <= posw[:, :, None]               # (B, W, C)
+    o = dense_attention(q, k, v, valid[:, None, None])
+    o = o.reshape(b, w, cfg.n_heads * hd)
+    return ops.flex_matmul(o, p["wo"], site="attn.out"), {"k": k, "v": v}
+
+
 def _slot_position(idx: jax.Array, pos: jax.Array, size: int) -> jax.Array:
     """Original sequence position stored in rolling slot ``idx`` at ``pos``."""
     cur_slot = pos % size

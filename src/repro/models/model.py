@@ -309,6 +309,144 @@ def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
     return toks, state, tok, pos, rem
 
 
+def verify_window(p: Params, cfg: ArchConfig, tokens: jax.Array,
+                  state: Params, pos: jax.Array, active: jax.Array
+                  ) -> Tuple[jax.Array, Params]:
+    """Score W consecutive tokens per row in ONE batched forward.
+
+    tokens (B, W); ``pos`` (B,) the position of each row's first token;
+    ``active`` (B,) masks which rows commit state (inactive rows ride as
+    filler, state bit-untouched — same contract as ``masked_decode_step``).
+    Returns logits (B, W, V) for every window position and the new state
+    with K/V written for **all** W positions of active rows.
+
+    Stale-KV safety (the rollback half of the speculative contract): when
+    the caller accepts only ``n ≤ W`` tokens, slots past ``pos + n`` hold
+    K/V the stream will never have produced — but the attention validity
+    mask excludes every slot above the query's position, and the next
+    block (decode or verify) starts at ``pos + n`` and re-writes each slot
+    *before* any query attends it, so stale entries are dead weight, never
+    an input.  Plain dense full-cache stacks only (see
+    ``transformer.decode_stack_window``).
+    """
+    x = embed(cfg, p["embed"], tokens)
+    with ops.active_rows(active):
+        x, new = transformer.decode_stack_window(p["stack"], cfg, x,
+                                                 state, pos)
+    state = jax.tree.map(
+        lambda old, nw: jnp.where(_batch_mask(active, old), nw, old),
+        state, new)
+    x = apply_norm(p["final_norm"], cfg, x)
+    return logits_head(cfg, head_matrix(p, cfg), x), state
+
+
+def verify_block(p_full: Params, p_draft: Params, cfg: ArchConfig,
+                 tokens: jax.Array, state: Params, pos: jax.Array,
+                 live: jax.Array, k: int, *,
+                 rem: Optional[jax.Array] = None,
+                 eos_id: Optional[int] = None,
+                 temp: Optional[jax.Array] = None,
+                 top_k: Optional[jax.Array] = None,
+                 seeds: Optional[jax.Array] = None,
+                 windowed: bool = True,
+                 ) -> Tuple[jax.Array, Params, jax.Array, jax.Array,
+                            jax.Array]:
+    """Self-speculative decode block: draft ``k`` tokens with the pruned
+    tier ``p_draft``, score all ``k + 1`` positions with the full plan
+    ``p_full``, accept the longest matching prefix.
+
+    Same signature family and **identical return contract** as
+    ``decode_many`` with ``n_steps = k + 1`` — (token block (k+1, B) int32
+    with ``-1`` sentinels past each row's acceptance point, new state,
+    token/pos/rem carries) — so a serving loop treats a verify block as an
+    ordinary decode block (sentinel truncation, carry chaining, async
+    deferral all unchanged).
+
+    Exactness: the emitted stream is token-for-token the full-plan stream.
+    Position ``i`` of the window feeds exactly what the full-plan oracle
+    would have fed *as long as every earlier draft token matched the
+    full-plan choice*; the first mismatch position is scored with the
+    full plan anyway, so its emitted token is the oracle's correction, and
+    everything past it emits sentinels.  A fully-matching window emits
+    ``k + 1`` tokens (the k drafts + the bonus token from the last scored
+    position).  Sampled rows use the position-keyed PRNG
+    (``sample_tokens``), making the draft's proposal and the oracle's
+    choice the same deterministic function of (seed, position, logits) —
+    acceptance degenerates to exact token equality, and the stream still
+    equals the full-plan sampled stream.
+
+    Draft state is **provisional by construction**: the draft runs
+    ``decode_many`` on a copy of the carries and its returned state is
+    discarded — rollback is free in a functional framework.  The verify
+    pass commits through the masked paths: ``windowed=True`` (plain dense
+    full-cache stacks) scores in one batched ``verify_window`` forward —
+    the throughput win — while ``windowed=False`` scans
+    ``masked_decode_step`` with commits gated on the still-matching mask,
+    leaving the state exactly the accepted prefix's.
+
+    The sequential scorer's exactness claim holds for **row-decoupled**
+    families only: capacity-bounded MoE routing competes for expert slots
+    across the whole batch (`moe.py`), so a row going inactive after its
+    rejection point changes *other* rows' capacity outcomes relative to
+    the lockstep oracle — no per-row early-exit scheme can be exact
+    there.  That, plus the fact that k+1 sequential full-plan steps save
+    nothing over plain decode, is why ``ServeEngine`` gates speculation
+    to windowed-exact families and serves everything else plain blocks.
+    """
+    live = live.astype(bool)
+    b = tokens.shape[0]
+    if rem is None:
+        rem = jnp.full((b,), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    eos = jnp.int32(-1 if eos_id is None else eos_id)
+    sample = temp is not None
+
+    # --- draft: k speculative tokens from the aggressive tier.  No budget
+    # or EOS stopping (the verify loop re-applies both exactly), state and
+    # carries discarded — only the proposed tokens survive.
+    d_toks, _, _, _, _ = decode_many(
+        p_draft, cfg, tokens, state, pos, live, k,
+        temp=temp, top_k=top_k, seeds=seeds)
+    # (B, k+1) feed window: current token, then the k draft proposals
+    # (sanitized: dead rows draft -1 sentinels, which must not hit embed)
+    win = jnp.concatenate(
+        [jnp.where(live, tokens.astype(jnp.int32), 0)[:, None],
+         jnp.maximum(d_toks.T, 0)], axis=1)
+
+    tok = tokens.astype(jnp.int32)
+    ps = pos.astype(jnp.int32)
+    rm = rem.astype(jnp.int32)
+    active0 = live & (rm > 0)
+
+    if windowed:
+        feed = jnp.where(active0[:, None], win, 0)
+        logits, state = verify_window(p_full, cfg, feed, state, ps, active0)
+
+    ok = live                   # prefix-still-matching (AND live)
+    emits = []
+    for i in range(k + 1):
+        act = ok & (rm > 0)
+        if windowed:
+            lg = logits[:, i, :]
+        else:
+            feed = jnp.where(act, win[:, i], 0)[:, None]
+            lg_i, state = masked_decode_step(p_full, cfg, feed, state,
+                                             ps, act)
+            lg = lg_i[:, 0, :]
+        if sample:
+            nxt = sample_tokens(lg, temp, top_k, seeds, ps)
+        else:
+            nxt = jnp.argmax(lg.astype(jnp.float32),
+                             axis=-1).astype(jnp.int32)
+        emits.append(jnp.where(act, nxt, -1))
+        rm = jnp.where(act, jnp.where(nxt == eos, 0, rm - 1), rm)
+        tok = jnp.where(act, nxt, tok)
+        ps = jnp.where(act, ps + 1, ps)
+        if i < k:
+            ok = ok & (win[:, i + 1] == nxt)
+
+    return jnp.stack(emits), state, tok, ps, rm
+
+
 def prefill_into_slot(p: Params, cfg: ArchConfig, tokens: jax.Array,
                       valid: jax.Array, slot: jax.Array, state: Params,
                       slot_pos: jax.Array, start: jax.Array = 0,

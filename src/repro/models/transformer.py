@@ -469,3 +469,35 @@ def decode_stack(p: Params, cfg: ArchConfig, x: jax.Array, state: Params,
         return h, st
     x_out, st = _lax_scan(body, x, (p["layers"], state["layers"]))
     return x_out, {"layers": st}
+
+
+def decode_stack_window(p: Params, cfg: ArchConfig, x: jax.Array,
+                        state: Params, pos: jax.Array
+                        ) -> Tuple[jax.Array, Params]:
+    """W-token batched decode through a plain dense stack — the speculative
+    verify scorer (``model.verify_window``).  x (B, W, D); ``pos`` (B,) the
+    position of each row's first window token.
+
+    Dense full-cache stacks only: MoE is deliberately excluded (its
+    expert-capacity dispatch is computed over the flattened (B·W) token
+    batch, so window tokens would *compete* for capacity with each other —
+    different drops than W sequential steps → inexact scoring), as are the
+    recurrent families (SSM / RG-LRU carry state token-to-token; a batched
+    window cannot reproduce the k-th step's carry without scanning).
+    Those families verify with the sequential scorer in
+    ``model.verify_block`` instead.
+    """
+    assert not (cfg.encoder_decoder or cfg.ssm.enabled or cfg.rglru.enabled
+                or cfg.moe.enabled) and not cfg.window, \
+        "decode_stack_window: plain dense full-cache stacks only"
+
+    def body(h, inp):
+        lp, st = inp
+        y = apply_norm(lp["ln1"], cfg, h)
+        o, st = attention.decode_window(lp["attn"], cfg, y, st, pos)
+        h = h + o
+        y = apply_norm(lp["ln2"], cfg, h)
+        return h + apply_mlp(lp["mlp"], cfg, y), st
+
+    x_out, st = _lax_scan(body, x, (p["layers"], state["layers"]))
+    return x_out, {"layers": st}

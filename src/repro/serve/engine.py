@@ -109,7 +109,7 @@ import collections
 import contextlib
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -234,6 +234,14 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new: int = 16
     sampling: Optional[SamplingParams] = None   # None = greedy
+    # plan-tier routing: 0 = full-quality tier; higher classes may decode
+    # under more aggressively pruned plan tiers (clamped to the engine's
+    # tier count).  Scheduling-only for class 0; relaxed classes trade
+    # accuracy for latency by construction.
+    latency_class: int = 0
+    # admission ordering class for PriorityAdmission (lower = sooner);
+    # schedule-only — never changes any stream
+    priority: int = 0
     out: List[int] = field(default_factory=list)
     done: bool = False
 
@@ -258,6 +266,12 @@ class _InflightBlock:
     live: List[int]
     t_block: int
     block: jax.Array
+    # >0 marks a speculative verify block: ``spec_k`` draft proposals were
+    # scored under the full (verify-tier) plan, so ``block`` is up to
+    # (spec_k + 1) rows of verify-tier tokens with -1 sentinels after the
+    # first rejected draft.  Used only for acceptance accounting —
+    # credit / drain / finish logic is identical to decode blocks.
+    spec_k: int = 0
 
 
 class AdmissionPolicy:
@@ -348,6 +362,27 @@ class AdaptiveAdmission(AdmissionPolicy):
         return self.max_chunk
 
 
+@dataclass(frozen=True)
+class PriorityAdmission(AdmissionPolicy):
+    """Strict priority-class admission: lower ``Request.priority`` first,
+    FIFO within a class.
+
+    A freed slot always takes the oldest request of the numerically lowest
+    priority class in the queue, so latency-sensitive requests stop
+    inheriting head-of-line blocking from bulk work without any change to
+    what is computed.  Pure queue reordering on the ``AdmissionPolicy``
+    surface: chunk sizing is inherited from the base policy and per-request
+    token streams are schedule-invariant (test-enforced against
+    ``FIFOAdmission``).  Starvation of high-numbered classes under a
+    sustained low-class stream is accepted by design — callers who need
+    fairness should age priorities at submit time.
+    """
+
+    def pick(self, queue: Deque[Request], engine: "ServeEngine") -> int:
+        return min(range(len(queue)),
+                   key=lambda i: (queue[i].priority, i))
+
+
 class ServeEngine:
     """Continuous-batching engine over the fused on-device executables.
 
@@ -385,7 +420,9 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  async_dispatch: bool = True,
                  admission: Optional[AdmissionPolicy] = None,
-                 quantize: bool = False):
+                 quantize: bool = False,
+                 plan_tiers: Optional[Sequence[float]] = None,
+                 speculate_k: int = 0):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.exec_cfg = exec_cfg
@@ -448,10 +485,87 @@ class ServeEngine:
                                               verify=verify_plan)
                              if self.plan is not None
                              else self._serve_params)
+        # elastic plan tiers: N pruned views of ONE weight set.  Tier 0 is
+        # the engine's full plan (ratio 0.0, required); tier i > 0 prunes
+        # the ratio-r weakest K-blocks per output tile out of the dispatch
+        # metadata while sharing the payload/leaves — attach copies no
+        # weights, so all tiers alias the same HBM-resident params.
+        # ``Request.latency_class`` routes blocks to tiers; the *last*
+        # (most aggressive) tier doubles as the self-speculation draft.
+        if speculate_k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got {speculate_k}")
+        self.speculate_k = int(speculate_k)
+        self.tier_ratios = (tuple(float(r) for r in plan_tiers)
+                            if plan_tiers is not None else (0.0,))
+        if plan_tiers is not None:
+            if self.plan is None or exec_cfg is None:
+                raise ValueError(
+                    "plan_tiers requires a planned engine (exec_cfg built "
+                    "by decode_exec_config with params)")
+            if not self.tier_ratios or self.tier_ratios[0] != 0.0:
+                raise ValueError(
+                    f"plan_tiers must start at ratio 0.0 (the full-quality "
+                    f"tier every class-0 request decodes under), got "
+                    f"{self.tier_ratios}")
+            if any(b < a for a, b in zip(self.tier_ratios,
+                                         self.tier_ratios[1:])):
+                raise ValueError(
+                    f"plan_tiers ratios must be non-decreasing, got "
+                    f"{self.tier_ratios}")
+        self._compile_tiers(verify=verify_plan)
+        # speculative accounting: lifetime draft/accept counters plus a
+        # per-slot (drafted, accepted) table — the per-site acceptance view
+        self.spec_stats = {"drafted": 0, "accepted": 0, "emitted": 0,
+                           "verify_blocks": 0}
+        self.spec_slot_stats = np.zeros((n_slots, 2), np.int64)
+        # speculative verify runs the whole k+1 window in ONE batched
+        # forward only for families where that is bitwise-equal to k+1
+        # sequential steps: plain dense-attention full-cache stacks.
+        # Everything else (MoE capacity competes across the batch and the
+        # window, recurrent state, sliding windows) has no exact-and-
+        # cheaper parallel scorer, so ``_spec_k_for`` gates speculation
+        # OFF for those families and they serve plain decode blocks —
+        # ``speculate_k`` is then a no-op, not an approximation.
+        # two_sided configs are gated for a substrate reason: the
+        # activation-bitmap masked dot fuses differently at the window's
+        # (B·W) row count than at decode's B rows on XLA:CPU, drifting the
+        # scores by last-ulp f32 — enough to flip near-tied argmaxes, so
+        # windowed verify cannot promise the sequential stream there
+        # (dense and weight-planned dispatch measure bitwise-stable).
+        self._spec_windowed = not (cfg.moe.enabled or cfg.ssm.enabled
+                                   or cfg.rglru.enabled
+                                   or cfg.encoder_decoder
+                                   or cfg.window
+                                   or cfg.sparsity.activation_threshold > 0)
         self._stats = (ops.SparsityStatsCollector()
                        if exec_cfg is not None and exec_cfg.collect_stats
                        else None)
         self._build_executables()
+
+    def _compile_tiers(self, *, verify: bool = False):
+        """(Re)compile the pruned plan tiers from ``tier_ratios`` and attach
+        each onto the served params.  Tier 0 reuses ``self.plan`` /
+        ``self._exec_params`` verbatim (ratio 0.0 compiles to a bitwise-
+        identical plan — test-enforced — so the rebuild is skipped); every
+        other tier compiles its own dispatch metadata over the SAME weight
+        tree, sharing payload and leaves.  Called at bring-up and from
+        ``maybe_recalibrate`` after a schedule swap."""
+        if len(self.tier_ratios) <= 1 or self.plan is None:
+            self.plan_tiers = [self.plan] if self.plan is not None else []
+            self._tier_params = [self._exec_params]
+            return
+        from repro.core.sparsity import compile_weight_plan
+        ref = 2 if self.quantize else None
+        tiers = [self.plan]
+        tier_params = [self._exec_params]
+        for r in self.tier_ratios[1:]:
+            p = compile_weight_plan(self._serve_params,
+                                    self.exec_cfg.schedules,
+                                    ref_elem_bytes=ref, prune_ratio=r)
+            tiers.append(p)
+            tier_params.append(p.attach(self._serve_params, verify=verify))
+        self.plan_tiers = tiers
+        self._tier_params = tier_params
 
     # ---- jitted executables ----
     def _scoped(self, fn):
@@ -498,12 +612,29 @@ class ServeEngine:
             return model_lib.prefill_into_slot(p, cfg, toks, valid, slot, s,
                                                slot_pos, start, reset)
 
+        def verify_fn(p_full, p_draft, s, toks, pos, live, rem, temp, top_k,
+                      seeds, k, windowed):
+            # one fused speculative block: draft tier proposes k tokens,
+            # the full (verify-tier) plan scores all k+1 positions, the
+            # longest matching prefix is accepted and the draft's state is
+            # discarded — return contract identical to decode_many with
+            # T = k + 1 (−1 sentinels after the first rejection)
+            return model_lib.verify_block(p_full, p_draft, cfg, toks, s,
+                                          pos, live, k, rem=rem,
+                                          eos_id=eos_id, temp=temp,
+                                          top_k=top_k, seeds=seeds,
+                                          windowed=windowed)
+
         self._decode = jax.jit(self._scoped(decode_fn))
         self._decode_many = jax.jit(self._scoped(decode_many_fn),
                                     static_argnums=(9,),
                                     donate_argnums=donate)
         self._prefill = jax.jit(self._scoped(prefill_fn),
                                 donate_argnums=donate)
+        self._verify = jax.jit(self._scoped(verify_fn),
+                               static_argnums=(10, 11),
+                               donate_argnums=((2,) if self.donate_state
+                                               else ()))
         # stale-trace hygiene: the mask cache holds device arrays handed to
         # the retired executables — clear every per-engine cache alongside
         # the rebuild so nothing compiled against the old table survives
@@ -526,14 +657,24 @@ class ServeEngine:
         self.flush()
         zero = np.zeros((self.n_slots,), np.int32)
         dead = np.zeros((self.n_slots,), bool)
-        t = 1
-        while t <= self.decode_block:
-            _, self.state, *_ = self._decode_many(
-                self._exec_params, self.state, zero, zero, dead, zero,
-                None, None, None, t)
-            t *= 2
+        for tier_p in self._tier_params:
+            t = 1
+            while t <= self.decode_block:
+                _, self.state, *_ = self._decode_many(
+                    tier_p, self.state, zero, zero, dead, zero,
+                    None, None, None, t)
+                t *= 2
         self._decode(self._exec_params, zero[:, None], self.state, zero,
                      dead)
+        if self.speculate_k and self._spec_windowed:
+            # the greedy verify-block shape for every tier a block can
+            # verify under (draft is baked into the same executable);
+            # sampled verify compiles on first sampled dispatch
+            for tier_p in self._tier_params[:-1] or self._tier_params:
+                _, self.state, *_ = self._verify(
+                    tier_p, self._tier_params[-1], self.state, zero, zero,
+                    dead, zero, None, None, None, self.speculate_k,
+                    self._spec_windowed)
         cap = _next_pow2(self.admission.chunk_cap(self) or self.max_seq)
         p = 1
         while p <= cap:
@@ -645,7 +786,9 @@ class ServeEngine:
                 for s in plan_sites)
             if self.plan is None or same_blocks:
                 # same granularity everywhere → old plan + attached params
-                # stay valid; skip the host-side plan rebuild entirely
+                # (and every pruned tier — tier metadata is tied to the
+                # same block granularity) stay valid; skip the host-side
+                # plan rebuild entirely
                 self.exec_cfg = dataclasses.replace(new_ec, plan=self.plan)
             else:
                 self.exec_cfg = decode_exec_config(
@@ -658,13 +801,25 @@ class ServeEngine:
                 self._exec_params = (
                     self.plan.attach(self._serve_params, verify=False)
                     if self.plan is not None else self._serve_params)
+                # a granularity move invalidates every tier's dispatch
+                # metadata — rebuild ALL tiers from the new schedules so
+                # draft/verify keep sharing the (unchanged) weight leaves
+                self._compile_tiers()
             self._build_executables()
         return measured
 
     # ---- request management ----
     def submit(self, prompt: np.ndarray, max_new: int = 16,
-               sampling: Optional[SamplingParams] = None) -> int:
+               sampling: Optional[SamplingParams] = None, *,
+               latency_class: int = 0, priority: int = 0) -> int:
         """Queue a request; returns its uid.
+
+        ``latency_class`` routes the request's decode blocks to a plan
+        tier: class 0 always decodes under the full plan; class c under
+        tier min(c, n_tiers-1) — more aggressively pruned, faster, lower
+        fidelity.  A mixed block decodes under the *least* aggressive live
+        class so no request is served below its class.  ``priority`` is the
+        ``PriorityAdmission`` ordering class (schedule-only).
 
         Admission edge cases are rejected *here*, not deep in the decode
         loop: an empty prompt has no current token to decode from, and a
@@ -681,9 +836,14 @@ class ServeEngine:
                 f"prompt of {len(prompt)} tokens needs {len(prompt) + 1} "
                 f"cache positions (prompt + first generated token) but "
                 f"max_seq={self.max_seq}")
+        if latency_class < 0:
+            raise ValueError(
+                f"latency_class must be >= 0, got {latency_class}")
         self._uid += 1
         self.queue.append(Request(self._uid, prompt, max_new=max_new,
-                                  sampling=sampling))
+                                  sampling=sampling,
+                                  latency_class=int(latency_class),
+                                  priority=int(priority)))
         return self._uid
 
     def _free_slots(self) -> List[int]:
@@ -885,8 +1045,8 @@ class ServeEngine:
         toks = self._current_tokens(live)[:, None]
         pos = self._slot_positions()
         logits, self.state = self._decode(
-            self._exec_params, toks, self.state, pos,
-            self._live_mask(live))
+            self._tier_params[self._block_tier(live)], toks, self.state,
+            pos, self._live_mask(live))
         samp = self._sampling_arrays(live)
         if samp is None:
             nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
@@ -939,34 +1099,87 @@ class ServeEngine:
         recycled to a *different* request between blocks."""
         return tuple((i, self.slots[i].req.uid) for i in live)
 
+    def _block_tier(self, live: List[int]) -> int:
+        """Plan tier a block over ``live`` decodes/verifies under: the
+        *minimum* (least aggressive) latency class among the live rows,
+        clamped to the tier count — a mixed block never serves any request
+        below its own class."""
+        if len(self._tier_params) <= 1:
+            return 0
+        hi = len(self._tier_params) - 1
+        return min(min(self.slots[i].req.latency_class, hi) for i in live)
+
+    def _spec_k_for(self, t_block: int, tier: int) -> int:
+        """Draft length for the next block, 0 to decode plain.  Speculate
+        when enabled and the block has >= 2 steps of budget (a 1-step block
+        is cheaper decoded directly), unless the verifying tier already IS
+        the draft tier — drafting with the same plan it verifies under
+        costs k extra steps for nothing.  A single-tier engine still
+        speculates (self-drafting under the full plan, the always-accept
+        test mode).  Families without a windowed-exact parallel scorer
+        (``_spec_windowed`` False) never speculate — the sequential
+        scorer saves nothing and batch-coupled MoE routing would drift
+        from the lockstep oracle."""
+        if not self.speculate_k or not self._spec_windowed or t_block < 2:
+            return 0
+        n = len(self._tier_params)
+        if n > 1 and tier >= n - 1:
+            return 0
+        return self.speculate_k
+
     def _dispatch_block(self, live: List[int], t_block: int, toks_in,
-                        pos_in, rem_in):
-        """Dispatch one fused ``decode_many`` block WITHOUT syncing its
-        token array: the (T, n_slots) block is parked on ``_inflight`` and
-        the device (token, pos, rem) carries are retained for the next
-        launch.  ``_account_one`` later pays the deferred host cost."""
+                        pos_in, rem_in) -> int:
+        """Dispatch one fused block WITHOUT syncing its token array: the
+        (T, n_slots) block is parked on ``_inflight`` and the device
+        (token, pos, rem) carries are retained for the next launch.
+        ``_account_one`` later pays the deferred host cost.
+
+        Tier routing and the speculate-or-decode choice live here so every
+        launch path (sync, async carry fast path, drain loop) gets them
+        uniformly: a speculative launch dispatches ONE fused verify block
+        (draft tier proposes ``speculate_k``, the block's tier scores all
+        k+1 positions) whose row length is spec_k + 1; a plain launch
+        dispatches ``decode_many`` under the block's tier.  Both return
+        carries with identical semantics, so verify and decode blocks
+        interleave freely in the double-buffer.  Returns the dispatched
+        row length (what the caller must count against its step budget)."""
+        tier = self._block_tier(live)
+        spec_k = self._spec_k_for(t_block, tier)
         samp = self._sampling_arrays(live)
         temp, topk, seeds = samp if samp is not None else (None, None, None)
-        block, self.state, dev_tok, dev_pos, dev_rem = self._decode_many(
-            self._exec_params, self.state, toks_in, pos_in,
-            self._live_mask(live), rem_in, temp, topk, seeds, t_block)
+        if spec_k:
+            t_block = spec_k + 1
+            block, self.state, dev_tok, dev_pos, dev_rem = self._verify(
+                self._tier_params[tier], self._tier_params[-1], self.state,
+                toks_in, pos_in, self._live_mask(live), rem_in, temp, topk,
+                seeds, spec_k, self._spec_windowed)
+        else:
+            block, self.state, dev_tok, dev_pos, dev_rem = \
+                self._decode_many(
+                    self._tier_params[tier], self.state, toks_in, pos_in,
+                    self._live_mask(live), rem_in, temp, topk, seeds,
+                    t_block)
         key = self._live_key(live)
         self._carry = (key, dev_tok, dev_pos, dev_rem)
         self._inflight.append(_InflightBlock(key, list(live), t_block,
-                                             block))
+                                             block, spec_k=spec_k))
+        return t_block
 
-    def _launch(self, live: List[int], t_block: int):
+    def _launch(self, live: List[int], t_block: int) -> int:
         """Launch a block for ``live``: from the device carries when they
         match this exact occupancy (no host round-trip — the async fast
         path), else from host-built inputs (first block, or after an
-        occupancy change invalidated the carries)."""
+        occupancy change invalidated the carries).  Returns the dispatched
+        row length (spec blocks are ``speculate_k + 1`` rows regardless of
+        the requested length; device budgets stop overshoot)."""
         if self._carry is not None and self._carry[0] == self._live_key(live):
             _, dev_tok, dev_pos, dev_rem = self._carry
-            self._dispatch_block(live, t_block, dev_tok, dev_pos, dev_rem)
-        else:
-            self._dispatch_block(live, t_block, self._current_tokens(live),
-                                 self._slot_positions(),
-                                 self._slot_budgets(live))
+            return self._dispatch_block(live, t_block, dev_tok, dev_pos,
+                                        dev_rem)
+        return self._dispatch_block(live, t_block,
+                                    self._current_tokens(live),
+                                    self._slot_positions(),
+                                    self._slot_budgets(live))
 
     def _account_one(self, out: Optional[Dict[int, List[int]]] = None
                      ) -> bool:
@@ -977,8 +1190,29 @@ class ServeEngine:
         requests finished — the occupancy-change signal that invalidates a
         speculatively dispatched successor block's live set."""
         blk = self._inflight.pop(0)
+        # map uid -> slot BEFORE crediting: a finished slot still holds its
+        # request afterwards, but this keeps the stats keyed off the
+        # occupancy the block was dispatched for
+        uid_slot = {self.slots[i].req.uid: i for i in blk.live}
         credited = self._append_block(blk.live, np.asarray(blk.block),
                                       blk.t_block)
+        if blk.spec_k:
+            # acceptance accounting: a row emitting n >= 1 tokens accepted
+            # n-1 of its spec_k drafts (the last emit is the verify tier's
+            # correction or bonus token); rows that emitted nothing were
+            # inactive and drafted nothing useful
+            self.spec_stats["verify_blocks"] += 1
+            for uid, toks in credited.items():
+                if not toks:
+                    continue
+                acc = len(toks) - 1
+                self.spec_stats["drafted"] += blk.spec_k
+                self.spec_stats["accepted"] += acc
+                self.spec_stats["emitted"] += len(toks)
+                i = uid_slot.get(uid)
+                if i is not None:
+                    self.spec_slot_stats[i, 0] += blk.spec_k
+                    self.spec_slot_stats[i, 1] += acc
         if out is not None:
             for uid, toks in credited.items():
                 out.setdefault(uid, []).extend(toks)
@@ -994,6 +1228,15 @@ class ServeEngine:
         while self._inflight:
             self._account_one(out)
         return out
+
+    def speculative_acceptance(self) -> float:
+        """Lifetime draft acceptance rate: accepted drafts / proposed
+        drafts over every verify block accounted so far (0.0 before any
+        speculation).  Per-slot (drafted, accepted) counts are in
+        ``spec_slot_stats``.  Call ``flush()`` first to fold any in-flight
+        verify block into the counters."""
+        d = self.spec_stats["drafted"]
+        return self.spec_stats["accepted"] / d if d else 0.0
 
     def _joinable(self) -> bool:
         """True when a request could join the live set this tick — a slot
@@ -1116,7 +1359,11 @@ class ServeEngine:
         when block k's accounting changes the occupancy (a request
         finished, a prefill chunk completed a feed), the in-flight
         speculative block is drained cleanly and the next block launches
-        from host state — the "clean drain on occupancy change" rule."""
+        from host state — the "clean drain on occupancy change" rule.
+        Self-speculative *verify* blocks ride the same ``_inflight`` queue
+        as decode blocks, so the rule drains them identically (their
+        tokens are verify-tier-exact regardless of when they are synced —
+        regression-tested)."""
         if not self.fused:
             return self._run_per_token(max_steps)
         results: Dict[int, List[int]] = {}
@@ -1143,8 +1390,7 @@ class ServeEngine:
                     break
                 t_block = self._block_len(
                     live, min(self.decode_block, max_steps - steps))
-                self._launch(live, t_block)
-                steps += t_block
+                steps += self._launch(live, t_block)
                 if not self.async_dispatch:
                     self._account_one()
                     self._collect(results)
@@ -1170,8 +1416,7 @@ class ServeEngine:
                     live, min(self.decode_block, max_steps - steps),
                     self._inflight[-1].t_block)
                 if t_spec > 0:
-                    self._launch(live, t_spec)
-                    steps += t_spec
+                    steps += self._launch(live, t_spec)
                     speculated = True
             changed = self._account_one()
             self._collect(results)

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Validate the BENCH_<n>.json perf-trajectory series against CHANGES.md.
+
+The trajectory artifacts used to be stamped ``BENCH_$(git rev-list --count
+HEAD).json`` — mainline commit count at CI time.  That index drifts with
+unrelated commits (BENCH_10.json was PR 7's report), so the series is now
+keyed by the PR number recorded in CHANGES.md: the stamp step runs
+``python tools/check_bench_trajectory.py --index`` to get the latest
+``PR <n>:`` entry, and this script's check mode keeps the committed series
+honest:
+
+* every ``BENCH_<n>.json`` in the repo root must correspond to a ``PR <n>:``
+  line in CHANGES.md;
+* from the first stamped PR onward, every PR must either have a report or
+  be listed in ``KNOWN_MISSING`` (PRs whose CI stamp predates this scheme
+  and whose rev-count-named artifact was never recovered);
+* sections are cumulative: a section introduced at PR k must be present in
+  every report with n >= k (``SECTIONS_BY_PR`` holds dotted key paths), so
+  a later PR can't silently end a series it didn't mean to touch.
+
+``--report <path>`` applies the same cumulative-section check to a freshly
+generated report before CI stamps it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# PRs with a CHANGES.md entry but no recoverable trajectory artifact: their
+# CI runs stamped under the old rev-count naming and the artifacts expired.
+KNOWN_MISSING = {6, 8}
+
+# Dotted key paths introduced at each PR.  Cumulative: BENCH_<n>.json must
+# contain every path listed for PRs <= n.
+SECTIONS_BY_PR = {
+    5: ["serve_throughput"],
+    6: ["serve_load"],
+    7: [
+        "serve_load.adaptive",
+        "serve_throughput.edge_tiny.tokens_per_s.fused_async",
+    ],
+    8: ["quantized_engine"],
+    9: ["speculative_engine"],
+}
+
+
+def changes_pr_numbers(changes_path: Path) -> list[int]:
+    text = changes_path.read_text()
+    nums = [int(m.group(1)) for m in re.finditer(r"^PR (\d+):", text, re.M)]
+    if not nums:
+        raise SystemExit(f"no 'PR <n>:' lines found in {changes_path}")
+    return nums
+
+
+def bench_files(root: Path) -> dict[int, Path]:
+    out = {}
+    for p in sorted(root.glob("BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if not m:
+            raise SystemExit(f"unparseable trajectory filename: {p.name}")
+        out[int(m.group(1))] = p
+    return out
+
+
+def _lookup(report: dict, dotted: str):
+    node = report
+    for key in dotted.split("."):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def required_sections(pr: int) -> list[str]:
+    return [s for k, paths in sorted(SECTIONS_BY_PR.items())
+            if k <= pr for s in paths]
+
+
+def check_report(path: Path, pr: int) -> list[str]:
+    try:
+        report = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    return [f"{path.name}: missing section '{s}' (required since PR "
+            f"{next(k for k, v in SECTIONS_BY_PR.items() if s in v)})"
+            for s in required_sections(pr) if _lookup(report, s) is None]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--changes", type=Path, default=ROOT / "CHANGES.md")
+    ap.add_argument("--root", type=Path, default=ROOT,
+                    help="directory holding BENCH_<n>.json artifacts")
+    ap.add_argument("--index", action="store_true",
+                    help="print the latest CHANGES.md PR number and exit")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="validate this fresh report against the latest "
+                         "PR's cumulative sections instead of the series")
+    args = ap.parse_args(argv)
+
+    prs = changes_pr_numbers(args.changes)
+    latest = max(prs)
+
+    if args.index:
+        print(latest)
+        return 0
+
+    if args.report is not None:
+        errs = check_report(args.report, latest)
+        for e in errs:
+            print(f"FAIL {e}", file=sys.stderr)
+        if not errs:
+            print(f"{args.report}: carries all sections through PR {latest}")
+        return 1 if errs else 0
+
+    files = bench_files(args.root)
+    if not files:
+        print("FAIL no BENCH_<n>.json artifacts found", file=sys.stderr)
+        return 1
+
+    errs = []
+    known = set(prs)
+    for n in files:
+        if n not in known:
+            errs.append(f"BENCH_{n}.json has no matching 'PR {n}:' line "
+                        f"in CHANGES.md")
+    first = min(files)
+    for n in range(first, latest + 1):
+        if n in known and n not in files and n not in KNOWN_MISSING:
+            errs.append(f"PR {n} has a CHANGES.md entry but no "
+                        f"BENCH_{n}.json (and is not in KNOWN_MISSING)")
+    for n in KNOWN_MISSING & set(files):
+        errs.append(f"BENCH_{n}.json exists but PR {n} is listed in "
+                    f"KNOWN_MISSING — remove it from the list")
+    for n, path in sorted(files.items()):
+        errs.extend(check_report(path, n))
+
+    for e in errs:
+        print(f"FAIL {e}", file=sys.stderr)
+    if not errs:
+        span = ", ".join(f"BENCH_{n}" for n in sorted(files))
+        print(f"trajectory consistent: {span} "
+              f"(known missing: {sorted(KNOWN_MISSING & known)})")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
