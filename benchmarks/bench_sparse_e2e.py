@@ -64,6 +64,7 @@ from repro.kernels import ops
 from repro.models import model as model_lib
 from repro.serve.engine import (AdaptiveAdmission, ServeEngine,
                                 decode_exec_config)
+from repro.serve.faults import poison_slot_state
 
 PROFILES = {
     # name: (weight_sparsity, activation_threshold, expected act_density)
@@ -772,6 +773,160 @@ def bench_serve_loadgen(quick: bool = False, seed: int = 0,
     return out
 
 
+def _run_faulted_traffic(eng, workload, plan) -> Dict[str, object]:
+    """Replay a timed workload with a fault mix layered on top: tight
+    deadlines at submit time, targeted cancel / NaN-poison faults fired
+    once their victim is decode-live, and a one-shot overload burst that
+    floods the bounded queue after the last scheduled arrival.  Per-run
+    terminal accounting comes from counter deltas (the engine's lifetime
+    counters span repeats).  TTFT is recorded for *base-workload*
+    requests only — burst chaff exists to trigger shedding."""
+    c0 = dict(eng.counters)
+    t0 = time.perf_counter()
+    arrive, first_tok = {}, {}
+    idx, reqs, uid_of = 0, {}, {}
+    faults = dict(plan["faults"])          # idx -> "cancel" | "nan"
+    burst_uids = []
+    while idx < len(workload) or any(not r.done for r in reqs.values()):
+        now = time.perf_counter() - t0
+        while idx < len(workload) and workload[idx][0] <= now:
+            _, prompt, max_new = workload[idx]
+            # targeted requests get a raised budget so the fault lands
+            # mid-stream instead of racing a one-block completion
+            uid = eng.submit(prompt,
+                             max_new=plan["max_new"].get(idx, max_new),
+                             deadline=plan["deadlines"].get(idx))
+            arrive[uid] = now
+            reqs[uid] = eng.queue[-1]
+            uid_of[idx] = uid
+            idx += 1
+        if idx >= len(workload) and not burst_uids:
+            # overload: flood the bounded queue in one gap between ticks —
+            # reject-new shedding must absorb it without touching live work
+            for prompt, max_new in plan["burst"]:
+                burst_uids.append(eng.submit(prompt, max_new=max_new))
+        for j in list(faults):
+            uid = uid_of.get(j)
+            if uid is None:
+                continue
+            st = eng.status(uid)
+            if st == "decode":
+                if faults.pop(j) == "cancel":
+                    eng.cancel(uid)
+                else:
+                    slot = next((i for i in eng._live()
+                                 if eng.slots[i].req.uid == uid), None)
+                    if slot is not None:
+                        poison_slot_state(eng, slot)
+                    else:               # in a carry-only window: next tick
+                        faults[j] = "nan"
+            elif st in ("done", "cancelled", "deadline_missed", "failed",
+                        "shed"):
+                faults.pop(j)           # fault raced completion: drop it
+        out = eng.decode_block_step()
+        now = time.perf_counter() - t0
+        for uid, toks in out.items():
+            if toks and uid not in first_tok:
+                first_tok[uid] = now
+        if not out and not eng._prefilling() and not eng._inflight \
+                and idx < len(workload):
+            time.sleep(0.0005)
+    for uid, toks in eng.flush().items():
+        if toks and uid not in first_tok:
+            first_tok[uid] = time.perf_counter() - t0
+    delta = {k: eng.counters[k] - c0.get(k, 0) for k in eng.counters}
+    survivors = [u for u in arrive if eng.status(u) == "done"]
+    ttft = [first_tok[u] - arrive[u] for u in survivors if u in first_tok]
+    n_total = len(arrive) + len(burst_uids)
+    return {
+        "submitted": n_total,
+        "base_requests": len(arrive),
+        "burst_requests": len(burst_uids),
+        "survivors": len(survivors),
+        "counters": delta,
+        "shed_rate": delta["shed"] / n_total,
+        "deadline_miss_rate": delta["deadline_missed"] / n_total,
+        "demotions": delta["demotions"],
+        "survivor_ttft_p99_s": float(np.percentile(ttft, 99)),
+    }
+
+
+def bench_serve_faultmix(quick: bool = False, seed: int = 3,
+                         repeats: int = 2) -> Dict[str, object]:
+    """Graceful degradation under fault traffic (ISSUE 10): the same
+    Poisson workload as the loadgen bench, on a planned edge-tiny engine
+    with elastic tiers and a bounded queue, with ~10 % of the traffic
+    faulted — a mid-decode cancel, a NaN slot poisoning, two impossible
+    deadlines, a deadline tight enough to trigger tier demotion, and an
+    overload burst that overflows the queue.  The claim validated
+    downstream: surviving requests' p99 TTFT stays within 1.5x of the
+    fault-free chunked baseline on the identical engine config — faults
+    degrade the faulted requests, not the batch."""
+    cfg = _edge_tiny_config()
+    sp_cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+        weight_sparsity=0.5, activation_threshold=0.0))
+    params = _prune_stack(model_lib.init_params(
+        cfg, jax.random.PRNGKey(0), dtype=jnp.float32), 0.5)
+    ec = decode_exec_config(sp_cfg, n_slots=4, params=params)
+    kw = dict(n_slots=4, max_seq=256, decode_block=8, eos_id=7,
+              prefill_chunk=32, exec_cfg=ec, plan_tiers=(0.0, 0.5),
+              # aggressive demotion bias: demote on 4x the projected need
+              # so the pressure deadline reliably routes to the cheap tier
+              demote_margin=4.0)
+    workload = _make_workload(cfg, quick, seed)
+    rng = np.random.default_rng(seed + 1)
+
+    # fault plan: targets drawn from the short-request tail (never the
+    # burst-head long prompts, whose TTFT anchors the baseline comparison)
+    shorts = [j for j, (_, p, _) in enumerate(workload) if len(p) < 64]
+    picks = [shorts[i] for i in
+             rng.permutation(len(shorts))[:5 if quick else 8]]
+    n_c = 1 if quick else 2
+    n_n = 1 if quick else 2
+    plan = {
+        "faults": {**{j: "cancel" for j in picks[:n_c]},
+                   **{j: "nan" for j in picks[n_c:n_c + n_n]}},
+        # impossible deadlines: expiry fires on the next tick, well past
+        # 0.1 ms — a deterministic deadline_missed pair
+        "deadlines": {picks[n_c + n_n]: 1e-4, picks[n_c + n_n + 1]: 1e-4},
+        "burst": [(rng.integers(0, cfg.vocab, size=4).astype(np.int32), 4)
+                  for _ in range(10)],
+        # raised budgets: a cancel/nan victim must still be mid-stream
+        # when its fault fires (decode_block=8 would otherwise complete a
+        # default 8..16-token budget inside the first in-flight block)
+        "max_new": {j: 64 for j in picks[:n_c + n_n]},
+    }
+    # deadline pressure (not expiry): a long budget against a deadline the
+    # full tier's projected service rate overruns -> tier demotion
+    demote_j = picks[n_c + n_n + 2]
+    plan["deadlines"][demote_j] = 0.08
+    plan["max_new"][demote_j] = 64
+
+    base_eng = ServeEngine(cfg, params, fused=True,
+                           **{k: v for k, v in kw.items()
+                              if k != "demote_margin"})
+    base_eng.warmup()
+    baseline = min((_run_traffic(base_eng, workload)
+                    for _ in range(repeats)),
+                   key=lambda t: t["ttft_p99_s"])
+
+    eng = ServeEngine(cfg, params, fused=True, max_queue=6, **kw)
+    eng.warmup()
+    fault = min((_run_faulted_traffic(eng, workload, plan)
+                 for _ in range(repeats)),
+                key=lambda t: t["survivor_ttft_p99_s"])
+
+    fault_frac = (n_c + n_n) / fault["submitted"]
+    return {
+        "arch": cfg.name, "planned": True, "plan_tiers": [0.0, 0.5],
+        "max_queue": 6, "fault_fraction": fault_frac,
+        **fault,
+        "baseline_ttft_p99_s": baseline["ttft_p99_s"],
+        "degradation_ratio": (fault["survivor_ttft_p99_s"]
+                              / baseline["ttft_p99_s"]),
+    }
+
+
 def run(out_path: str, verbose: bool = True,
         quick: bool = False) -> Dict[str, object]:
     profiles = ({"moderate": PROFILES["moderate"]} if quick else PROFILES)
@@ -868,6 +1023,17 @@ def run(out_path: str, verbose: bool = True,
         print(f"loadgen: chunked tokens == oracle: "
               f"{lg['tokens_match_oracle']}, adaptive == oracle: "
               f"{lg['adaptive_tokens_match_oracle']}")
+    fm = bench_serve_faultmix(quick=quick)
+    report["serve_load_faults"] = fm
+    if verbose:
+        print(f"faultmix: {fm['submitted']} submitted "
+              f"({fm['fault_fraction']*100:.0f}% targeted faults) "
+              f"shed_rate={fm['shed_rate']:.2f} "
+              f"deadline_miss_rate={fm['deadline_miss_rate']:.2f} "
+              f"demotions={fm['demotions']} "
+              f"survivor p99 ttft={fm['survivor_ttft_p99_s']*1e3:.1f} ms "
+              f"vs baseline {fm['baseline_ttft_p99_s']*1e3:.1f} ms "
+              f"({fm['degradation_ratio']:.2f}x)")
     for name, prof in profiles.items():
         site = bench_site(prof, **site_kw)
         eng = bench_engine(prof, n_steps=n_steps)
@@ -1022,6 +1188,28 @@ def validate(report: Dict[str, object]) -> list:
                 f"the decode-friendly fixed chunk "
                 f"(adaptive={p99['adaptive']:.4f}s vs "
                 f"fifo-chunked={p99['chunked_small']:.4f}s)")
+    fm = report.get("serve_load_faults", {})
+    if not fm:
+        failures.append("no loadgen fault-mix section in the report")
+    else:
+        for key in ("shed_rate", "deadline_miss_rate", "demotions",
+                    "survivor_ttft_p99_s", "baseline_ttft_p99_s",
+                    "degradation_ratio"):
+            if key not in fm:
+                failures.append(f"faultmix: missing {key} in the report")
+        if fm.get("counters", {}).get("shed", 0) <= 0:
+            failures.append("faultmix: overload burst shed nothing — the "
+                            "bounded queue is not rejecting")
+        if fm.get("counters", {}).get("deadline_missed", 0) <= 0:
+            failures.append("faultmix: no deadline_missed despite 0.1 ms "
+                            "deadlines — expiry is not firing")
+        # the graceful-degradation claim: fault traffic may only degrade
+        # the faulted requests, not the surviving batch
+        if not fm.get("degradation_ratio", float("inf")) <= 1.5:
+            failures.append(
+                f"faultmix: surviving-request p99 TTFT degraded "
+                f"{fm.get('degradation_ratio'):.2f}x past the fault-free "
+                f"chunked baseline (bound 1.5x)")
     for name, r in report["profiles"].items():
         md = r["site"]["modeled"]
         if not (md["two_sided"]["energy"] <= md["weight"]["energy"]

@@ -154,8 +154,15 @@ class SparsityStatsCollector:
         self._total[site] = self._total.get(site, 0) + int(total)
 
     def densities(self) -> Dict[str, float]:
-        """Measured element-level activation density per site."""
-        return {s: self._live[s] / t
+        """Measured element-level activation density per site.
+
+        Zero-sample sites are skipped rather than divided by zero: a site
+        whose every recorded tick had zero total elements (e.g. a block
+        dispatched with no live rows) contributes no density estimate, and
+        a fresh/reset collector returns ``{}``.  ``_live.get`` guards the
+        (callback-ordering) corner where a total was recorded without a
+        matching live count."""
+        return {s: self._live.get(s, 0) / t
                 for s, t in self._total.items() if t}
 
 

@@ -232,6 +232,15 @@ def sample_tokens(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
     return jnp.where(temp > 0, sampled, greedy)
 
 
+# On-device row-stop sentinels emitted by ``decode_many`` / ``verify_block``
+# token blocks: -1 marks a benign stop (EOS hit or budget drained — the host
+# truncates and the request completes normally), QUARANTINE_SENTINEL (-2)
+# marks an on-device NaN/Inf quarantine under ``nan_guard`` — the host
+# truncates at it and marks the request *failed*.  Both sit below every
+# valid token id, so sentinel scans are a single ``tok < 0`` test.
+QUARANTINE_SENTINEL = -2
+
+
 def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
                 pos: jax.Array, live: jax.Array, n_steps: int, *,
                 rem: Optional[jax.Array] = None,
@@ -239,6 +248,7 @@ def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
                 temp: Optional[jax.Array] = None,
                 top_k: Optional[jax.Array] = None,
                 seeds: Optional[jax.Array] = None,
+                nan_guard: bool = False,
                 ) -> Tuple[jax.Array, Params, jax.Array, jax.Array,
                            jax.Array]:
     """Fused multi-token decode: ``n_steps`` decode steps in one
@@ -263,6 +273,20 @@ def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
     ``temp`` / ``top_k`` / ``seeds`` (all (B,), or all None for pure
     greedy) select per-row sampling (see ``sample_tokens``); randomness is
     position-keyed, so sampled streams are block-boundary invariant too.
+
+    ``nan_guard`` adds on-device NaN/Inf quarantine: a row whose logits go
+    non-finite at some step is deactivated *at that step* — it emits the
+    distinct ``QUARANTINE_SENTINEL`` (-2), its budget is zeroed (so any
+    speculatively dispatched successor block sees it inactive) and its
+    token/position carries stay frozen at the last healthy step.  Only the
+    poisoned row stops; every other row's stream is bit-unchanged (the
+    guard is a per-row select on integer carries — when no row is
+    poisoned, the emitted block is identical to the unguarded one).  The
+    host distinguishes -2 from the -1 EOS/budget sentinel to mark the
+    request ``failed`` rather than ``done``.  Note the poisoned row's
+    state row may hold non-finite values from the detection step; rows
+    are state-decoupled and the serving layer zero-resets a slot on
+    re-admission, so the poison never crosses rows.
 
     Returns (token block (T, B) int32, new state, final token carry (B,),
     final position carry (B,), final remaining-budget carry (B,)).  The
@@ -297,10 +321,21 @@ def decode_many(p: Params, cfg: ArchConfig, tokens: jax.Array, state: Params,
             nxt = sample_tokens(lg, temp, top_k, seeds, ps)
         else:
             nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        emit = jnp.where(active, nxt, -1)
-        rm = jnp.where(active, jnp.where(nxt == eos, 0, rm - 1), rm)
-        tok = jnp.where(active, nxt, tok)
-        ps = jnp.where(active, ps + 1, ps)
+        if nan_guard:
+            bad = active & ~jnp.all(jnp.isfinite(lg), axis=-1)
+            good = active & ~bad
+            emit = jnp.where(bad, QUARANTINE_SENTINEL,
+                             jnp.where(active, nxt, -1))
+            rm = jnp.where(bad, 0,
+                           jnp.where(active,
+                                     jnp.where(nxt == eos, 0, rm - 1), rm))
+            tok = jnp.where(good, nxt, tok)
+            ps = jnp.where(good, ps + 1, ps)
+        else:
+            emit = jnp.where(active, nxt, -1)
+            rm = jnp.where(active, jnp.where(nxt == eos, 0, rm - 1), rm)
+            tok = jnp.where(active, nxt, tok)
+            ps = jnp.where(active, ps + 1, ps)
         return (tok, st, ps, rm), emit
 
     (tok, state, pos, rem), toks = maybe_unrolled_scan(
@@ -349,6 +384,7 @@ def verify_block(p_full: Params, p_draft: Params, cfg: ArchConfig,
                  top_k: Optional[jax.Array] = None,
                  seeds: Optional[jax.Array] = None,
                  windowed: bool = True,
+                 nan_guard: bool = False,
                  ) -> Tuple[jax.Array, Params, jax.Array, jax.Array,
                             jax.Array]:
     """Self-speculative decode block: draft ``k`` tokens with the pruned
@@ -392,6 +428,14 @@ def verify_block(p_full: Params, p_draft: Params, cfg: ArchConfig,
     there.  That, plus the fact that k+1 sequential full-plan steps save
     nothing over plain decode, is why ``ServeEngine`` gates speculation
     to windowed-exact families and serves everything else plain blocks.
+
+    ``nan_guard`` quarantines rows whose *verify-tier* logits go
+    non-finite, exactly as in ``decode_many``: the row emits
+    ``QUARANTINE_SENTINEL`` (-2) at the poisoned position, freezes its
+    carries there and zeroes its budget.  The draft pass runs unguarded —
+    its tokens are proposals; a poisoned draft either disagrees with the
+    healthy verify scores (rejected as usual) or the verify scores are
+    poisoned too, which is what the guard detects.
     """
     live = live.astype(bool)
     b = tokens.shape[0]
@@ -437,12 +481,25 @@ def verify_block(p_full: Params, p_draft: Params, cfg: ArchConfig,
         else:
             nxt = jnp.argmax(lg.astype(jnp.float32),
                              axis=-1).astype(jnp.int32)
-        emits.append(jnp.where(act, nxt, -1))
-        rm = jnp.where(act, jnp.where(nxt == eos, 0, rm - 1), rm)
-        tok = jnp.where(act, nxt, tok)
-        ps = jnp.where(act, ps + 1, ps)
-        if i < k:
-            ok = ok & (win[:, i + 1] == nxt)
+        if nan_guard:
+            bad = act & ~jnp.all(jnp.isfinite(lg), axis=-1)
+            good = act & ~bad
+            emits.append(jnp.where(bad, QUARANTINE_SENTINEL,
+                                   jnp.where(act, nxt, -1)))
+            rm = jnp.where(bad, 0,
+                           jnp.where(act,
+                                     jnp.where(nxt == eos, 0, rm - 1), rm))
+            tok = jnp.where(good, nxt, tok)
+            ps = jnp.where(good, ps + 1, ps)
+            if i < k:
+                ok = ok & ~bad & (win[:, i + 1] == nxt)
+        else:
+            emits.append(jnp.where(act, nxt, -1))
+            rm = jnp.where(act, jnp.where(nxt == eos, 0, rm - 1), rm)
+            tok = jnp.where(act, nxt, tok)
+            ps = jnp.where(act, ps + 1, ps)
+            if i < k:
+                ok = ok & (win[:, i + 1] == nxt)
 
     return jnp.stack(emits), state, tok, ps, rm
 

@@ -1,8 +1,15 @@
 """repro.serve subsystem: continuous-batching engine over the flex-sparse
-dispatch stack."""
-from repro.serve.engine import (AdaptiveAdmission, AdmissionPolicy,
-                                FIFOAdmission, Request, SamplingParams,
-                                ServeEngine, decode_exec_config)
+dispatch stack, plus deterministic fault injection for chaos testing."""
+from repro.serve.engine import (TERMINAL_STATES, AdaptiveAdmission,
+                                AdmissionPolicy, FIFOAdmission,
+                                PriorityAdmission, Request, SamplingParams,
+                                ServeEngine, ShedLowestPriority,
+                                decode_exec_config)
+from repro.serve.faults import (Fault, FaultInjector, VirtualClock, drive,
+                                poison_slot_state, random_schedule)
 
 __all__ = ["AdaptiveAdmission", "AdmissionPolicy", "FIFOAdmission",
-           "Request", "SamplingParams", "ServeEngine", "decode_exec_config"]
+           "Fault", "FaultInjector", "PriorityAdmission", "Request",
+           "SamplingParams", "ServeEngine", "ShedLowestPriority",
+           "TERMINAL_STATES", "VirtualClock", "decode_exec_config", "drive",
+           "poison_slot_state", "random_schedule"]

@@ -108,8 +108,9 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import time
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -228,6 +229,15 @@ class SamplingParams:
     seed: int = 0
 
 
+# Terminal ``Request.status`` values.  A request ends in exactly one:
+#   done            — EOS / budget / sequence-wall completion
+#   cancelled       — ServeEngine.cancel(uid)
+#   deadline_missed — submit(deadline=...) budget expired before completion
+#   failed          — on-device NaN/Inf quarantine (-2 sentinel)
+#   shed            — bounded-queue overload eviction / rejection
+TERMINAL_STATES = ("done", "cancelled", "deadline_missed", "failed", "shed")
+
+
 @dataclass
 class Request:
     uid: int
@@ -242,8 +252,17 @@ class Request:
     # admission ordering class for PriorityAdmission (lower = sooner);
     # schedule-only — never changes any stream
     priority: int = 0
+    # absolute deadline on the engine clock (None = no deadline); set by
+    # ``submit(deadline=...)`` relative to the engine's ``clock()``
+    deadline: Optional[float] = None
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # lifecycle: queued -> prefill -> decode -> one of TERMINAL_STATES.
+    # ``done`` stays the boolean "is terminal" fast path (it is True for
+    # every terminal status, not only "done").
+    status: str = "queued"
+    # deadline-pressure tier demotions applied (latency_class increments)
+    demotions: int = 0
 
 
 @dataclass
@@ -302,6 +321,46 @@ class AdmissionPolicy:
         """Largest chunk ``chunk`` may ever return (None = unbounded, the
         whole-prompt path — warmup then compiles up to ``max_seq``)."""
         return engine.prefill_chunk
+
+    def shed(self, queue: Deque[Request], engine: "ServeEngine",
+             incoming: Request) -> Optional[int]:
+        """Overload valve, consulted only when the engine's bounded queue
+        (``max_queue``) is full at submit time: return the index of a
+        queued request to evict in favour of ``incoming``, or ``None`` to
+        reject ``incoming`` itself.  The base policy is **reject-new**:
+        admitted work is never evicted, the late arrival is shed.  Either
+        victim ends terminal ``status == "shed"`` (and counts in
+        ``engine.counters["shed"]``); shedding never touches requests that
+        already hold a slot."""
+        return None
+
+
+def _lowest_priority_victim(queue: Deque[Request],
+                            incoming: Request) -> Optional[int]:
+    """Shared shed rule: evict the numerically highest-priority (least
+    important) queued request, newest within a class, but only when the
+    incoming request strictly outranks it — otherwise reject the
+    incoming one (equal classes keep admitted work, matching the
+    reject-new baseline)."""
+    if not queue:
+        return None
+    worst = max(range(len(queue)), key=lambda i: (queue[i].priority, i))
+    return worst if incoming.priority < queue[worst].priority else None
+
+
+class ShedLowestPriority(AdmissionPolicy):
+    """FIFO admission + shed-lowest-priority overload policy.
+
+    When the bounded queue is full, an incoming request evicts the least
+    important queued request (highest ``Request.priority`` number, newest
+    within the class) if it strictly outranks it; otherwise the incoming
+    request is rejected like the base policy.  The admission order itself
+    stays FIFO — pair with ``PriorityAdmission`` (which inherits the same
+    shed rule) to also reorder admission by class."""
+
+    def shed(self, queue: Deque[Request], engine: "ServeEngine",
+             incoming: Request) -> Optional[int]:
+        return _lowest_priority_victim(queue, incoming)
 
 
 class FIFOAdmission(AdmissionPolicy):
@@ -382,6 +441,13 @@ class PriorityAdmission(AdmissionPolicy):
         return min(range(len(queue)),
                    key=lambda i: (queue[i].priority, i))
 
+    def shed(self, queue: Deque[Request], engine: "ServeEngine",
+             incoming: Request) -> Optional[int]:
+        # priority admission sheds by the same ordering it admits by:
+        # under overload the least important queued request makes room
+        # for a strictly more important arrival (see ShedLowestPriority)
+        return _lowest_priority_victim(queue, incoming)
+
 
 class ServeEngine:
     """Continuous-batching engine over the fused on-device executables.
@@ -422,7 +488,12 @@ class ServeEngine:
                  admission: Optional[AdmissionPolicy] = None,
                  quantize: bool = False,
                  plan_tiers: Optional[Sequence[float]] = None,
-                 speculate_k: int = 0):
+                 speculate_k: int = 0,
+                 max_queue: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 nan_guard: bool = True,
+                 deadline_demotion: bool = True,
+                 demote_margin: float = 1.0):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_seq = n_slots, max_seq
         self.exec_cfg = exec_cfg
@@ -452,6 +523,40 @@ class ServeEngine:
         # carries keyed by the (slot, uid) live set they were produced for
         self._inflight: List[_InflightBlock] = []
         self._carry: Optional[tuple] = None
+        # ---- fault tolerance (ISSUE 10) ----
+        # bounded queue: submit past max_queue consults admission.shed()
+        # (None = unbounded, the pre-overload-aware behaviour)
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.max_queue = max_queue
+        # injectable clock (deadlines, demotion pressure, fault tests use
+        # a deterministic VirtualClock; production uses the monotonic one)
+        self._clock = clock if clock is not None else time.monotonic
+        # on-device NaN/Inf quarantine: decode_many / verify_block emit the
+        # -2 sentinel for a row whose logits go non-finite; the host marks
+        # that request ``failed`` and only that row stops
+        self.nan_guard = bool(nan_guard)
+        # deadline-pressure tier demotion: when a deadline can't be met at
+        # the request's latency class and a cheaper plan tier exists,
+        # demote instead of letting it expire (recorded per request and in
+        # counters["demotions"])
+        self.deadline_demotion = bool(deadline_demotion)
+        self.demote_margin = float(demote_margin)
+        # terminal-status accounting: lifetime counters per terminal state
+        # (+ demotions), and a bounded uid -> status map so status(uid)
+        # outlives slot recycling without unbounded growth
+        self.counters = {s: 0 for s in TERMINAL_STATES}
+        self.counters["demotions"] = 0
+        self._terminal: "collections.OrderedDict[int, str]" = \
+            collections.OrderedDict()
+        # terminal uid -> credited output tokens (shares _terminal's bound);
+        # ``results()`` reads this after the slot is recycled
+        self._outputs: "collections.OrderedDict[int, List[int]]" = \
+            collections.OrderedDict()
+        # EMA of wall seconds per credited token — the demotion trigger's
+        # service-rate estimate (None until two accounted blocks)
+        self._tok_ema: Optional[float] = None
+        self._last_account: Optional[float] = None
         self.state = model_lib.init_decode_state(cfg, n_slots, max_seq,
                                                  dtype=dtype)
         self.slots = [_Slot() for _ in range(n_slots)]
@@ -595,6 +700,7 @@ class ServeEngine:
         cfg = self.cfg
         donate = (1,) if self.donate_state else ()
         eos_id = self.eos_id
+        nan_guard = self.nan_guard
 
         def decode_fn(p, t, s, pos, live):
             # the oracle step masks state commits to live rows exactly like
@@ -606,7 +712,8 @@ class ServeEngine:
                            n_steps):
             return model_lib.decode_many(p, cfg, toks, s, pos, live, n_steps,
                                          rem=rem, eos_id=eos_id, temp=temp,
-                                         top_k=top_k, seeds=seeds)
+                                         top_k=top_k, seeds=seeds,
+                                         nan_guard=nan_guard)
 
         def prefill_fn(p, s, toks, valid, slot, slot_pos, start, reset):
             return model_lib.prefill_into_slot(p, cfg, toks, valid, slot, s,
@@ -623,7 +730,8 @@ class ServeEngine:
                                           pos, live, k, rem=rem,
                                           eos_id=eos_id, temp=temp,
                                           top_k=top_k, seeds=seeds,
-                                          windowed=windowed)
+                                          windowed=windowed,
+                                          nan_guard=nan_guard)
 
         self._decode = jax.jit(self._scoped(decode_fn))
         self._decode_many = jax.jit(self._scoped(decode_many_fn),
@@ -809,9 +917,29 @@ class ServeEngine:
         return measured
 
     # ---- request management ----
+    def _finish(self, req: Request, status: str = "done"):
+        """Move a request to a terminal status — the ONLY place a request
+        ends.  Idempotent (the first terminal status wins: a cancelled
+        request can't be re-finished ``done`` by a late block sync), keeps
+        the boolean ``done`` fast path in sync, bumps the lifetime counter
+        and records the status in the bounded uid map ``status()`` reads
+        after the slot is recycled."""
+        if req.done:
+            return
+        req.status = status
+        req.done = True
+        self.counters[status] += 1
+        self._terminal[req.uid] = status
+        self._outputs[req.uid] = req.out
+        while len(self._terminal) > 4096:
+            self._terminal.popitem(last=False)
+        while len(self._outputs) > 4096:
+            self._outputs.popitem(last=False)
+
     def submit(self, prompt: np.ndarray, max_new: int = 16,
                sampling: Optional[SamplingParams] = None, *,
-               latency_class: int = 0, priority: int = 0) -> int:
+               latency_class: int = 0, priority: int = 0,
+               deadline: Optional[float] = None) -> int:
         """Queue a request; returns its uid.
 
         ``latency_class`` routes the request's decode blocks to a plan
@@ -820,6 +948,20 @@ class ServeEngine:
         fidelity.  A mixed block decodes under the *least* aggressive live
         class so no request is served below its class.  ``priority`` is the
         ``PriorityAdmission`` ordering class (schedule-only).
+
+        ``deadline`` is a completion budget in engine-clock seconds from
+        now: a request not finished by then goes terminal
+        ``deadline_missed`` (checked every tick, wherever the request is —
+        queued, mid-prefill or mid-decode).  Under deadline pressure a
+        tiered engine may first demote the request to a cheaper plan tier
+        instead (see ``deadline_demotion``).
+
+        With a bounded queue (``max_queue``) a submit that finds the queue
+        full consults ``admission.shed(queue, engine, incoming)``: either
+        a queued victim is evicted or the incoming request itself is
+        rejected — the loser ends terminal ``"shed"`` (a rejected incoming
+        request still gets a uid, so callers can observe
+        ``status(uid) == "shed"``).
 
         Admission edge cases are rejected *here*, not deep in the decode
         loop: an empty prompt has no current token to decode from, and a
@@ -839,12 +981,166 @@ class ServeEngine:
         if latency_class < 0:
             raise ValueError(
                 f"latency_class must be >= 0, got {latency_class}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0 seconds, got {deadline}")
         self._uid += 1
-        self.queue.append(Request(self._uid, prompt, max_new=max_new,
-                                  sampling=sampling,
-                                  latency_class=int(latency_class),
-                                  priority=int(priority)))
+        req = Request(self._uid, prompt, max_new=max_new,
+                      sampling=sampling,
+                      latency_class=int(latency_class),
+                      priority=int(priority),
+                      deadline=(self._clock() + deadline
+                                if deadline is not None else None))
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            victim = self.admission.shed(self.queue, self, req)
+            if victim is None:
+                self._finish(req, "shed")
+                return req.uid
+            if not 0 <= victim < len(self.queue):
+                raise ValueError(
+                    f"shed() returned index {victim} for a queue of "
+                    f"{len(self.queue)}")
+            evicted = self.queue[victim]
+            del self.queue[victim]
+            self._finish(evicted, "shed")
+        self.queue.append(req)
         return self._uid
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request anywhere in its lifecycle; returns True when it
+        was found non-terminal (queued, mid-prefill or mid-decode) and is
+        now terminal ``cancelled``, False for unknown or already-terminal
+        uids.
+
+        Mid-decode cancellation rides the async machinery from PR 7 rather
+        than going around it: marking the request terminal drops it out of
+        ``_live()``, which invalidates the (slot, uid) carry key, so the
+        next launch comes from host state, and any in-flight block synced
+        after the cancel skips the row entirely (``_append_block`` never
+        credits a terminal request) — a cancelled slot can't leak a
+        speculative block's tokens into its successor.  No flush happens
+        here: cancellation is O(queue) host work on the serving tick."""
+        for idx, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[idx]
+                self._finish(r, "cancelled")
+                return True
+        for s in self.slots:
+            if s.req is not None and s.req.uid == uid and not s.req.done:
+                self._finish(s.req, "cancelled")
+                return True
+        return False
+
+    def status(self, uid: int) -> Optional[str]:
+        """Lifecycle status for a submitted uid — ``queued`` / ``prefill``
+        / ``decode`` while live, one of ``TERMINAL_STATES`` after, or
+        ``None`` for unknown (or very old, see the bounded terminal map)
+        uids.  Snapshot semantics: under async dispatch a request may
+        already be finished inside an unsynced block; ``flush()`` first for
+        an exact answer."""
+        for r in self.queue:
+            if r.uid == uid:
+                return r.status
+        for s in self.slots:
+            if s.req is not None and s.req.uid == uid:
+                return s.req.status
+        return self._terminal.get(uid)
+
+    def results(self) -> Dict[int, List[int]]:
+        """Credited output tokens for every *terminal* request (any status:
+        a cancelled/failed request reports the prefix it streamed before
+        the fault).  Live requests are excluded — poll ``status()``.  Like
+        ``status()``, bounded to the most recent 4096 terminals."""
+        return dict(self._outputs)
+
+    def _expire_deadlines(self) -> bool:
+        """Terminal-mark every request whose deadline has passed on the
+        engine clock — queued requests drop out of the queue, slot-bound
+        ones (mid-prefill or mid-decode) free their slot exactly like a
+        cancellation (same carry-invalidation + never-credit-terminal
+        rules).  Returns True when anything expired.  Called at the top of
+        every serving tick, so expiry is detected within one tick of the
+        clock crossing the deadline."""
+        now = self._clock()
+        expired = False
+        survivors = []
+        for r in self.queue:
+            if r.deadline is not None and r.deadline <= now:
+                self._finish(r, "deadline_missed")
+                expired = True
+            else:
+                survivors.append(r)
+        if expired:
+            self.queue = collections.deque(survivors)
+        for s in self.slots:
+            r = s.req
+            if (r is not None and not r.done and r.deadline is not None
+                    and r.deadline <= now):
+                self._finish(r, "deadline_missed")
+                expired = True
+        return expired
+
+    def _maybe_demote(self):
+        """Deadline-pressure tier demotion: a live request whose remaining
+        deadline budget can't cover its remaining tokens at the measured
+        service rate (``_tok_ema`` seconds/token, scaled by
+        ``demote_margin``) is demoted one latency class — routed to a
+        cheaper pruned plan tier (PR 9) — instead of being left to expire.
+        One class per tick per request, clamped to the tier count; each
+        demotion is recorded on the request and in
+        ``counters["demotions"]``.  Requires a tiered engine and at least
+        one accounted block (no service-rate estimate, no demotion);
+        ``deadline_demotion=False`` disables the policy (expiry then stays
+        the only deadline response).
+
+        Note the block tier is the *minimum* class across live rows — a
+        demoted request speeds up its block only once every live row's
+        class allows it — so demotion weakens the demoted request's own
+        fidelity guarantee, never its batchmates'."""
+        if (not self.deadline_demotion or len(self._tier_params) <= 1
+                or self._tok_ema is None):
+            return
+        now = self._clock()
+        hi = len(self._tier_params) - 1
+        for i in self._live():
+            r = self.slots[i].req
+            if r.deadline is None or r.latency_class >= hi:
+                continue
+            need = ((r.max_new - len(r.out)) * self._tok_ema
+                    * self.demote_margin)
+            if need > r.deadline - now:
+                r.latency_class += 1
+                r.demotions += 1
+                self.counters["demotions"] += 1
+
+    def health(self) -> Dict[str, object]:
+        """Engine health snapshot: queue depth, slot occupancy, in-flight
+        speculation state, per-request lifecycle statuses for everything
+        the engine currently tracks (queued + slot-bound), lifetime
+        terminal/demotion counters and the speculative-decoding stats.
+
+        Snapshot semantics — no flush, no device sync: figures reflect
+        accounting up to the last synced block (``flush()`` first for
+        exact-at-this-instant numbers).  Cheap enough to poll every tick.
+        """
+        live = self._live()
+        prefilling = self._prefilling()
+        requests = {r.uid: r.status for r in self.queue}
+        requests.update({s.req.uid: s.req.status for s in self.slots
+                         if s.req is not None})
+        return {
+            "queue_depth": len(self.queue),
+            "max_queue": self.max_queue,
+            "free_slots": len(self._free_slots()),
+            "decoding": len(live),
+            "prefilling": len(prefilling),
+            "inflight_blocks": len(self._inflight),
+            "inflight_speculative": sum(1 for b in self._inflight
+                                        if b.spec_k),
+            "requests": requests,
+            "counters": dict(self.counters),
+            "spec": dict(self.spec_stats),
+            "tok_ema_s": self._tok_ema,
+        }
 
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots)
@@ -886,6 +1182,11 @@ class ServeEngine:
                                    np.int32(start), start == 0)
         s.prefill_cursor = start + len(seg)
         s.pos = s.prefill_cursor
+        # lifecycle: the slot is decode-ready once the whole feed landed
+        if not s.req.done:
+            s.req.status = ("decode"
+                            if s.prefill_cursor >= self._feed_len(s.req)
+                            else "prefill")
 
     def _admit(self):
         """Move queued requests into free slots.  The ``admission`` policy
@@ -973,7 +1274,7 @@ class ServeEngine:
         r = s.req
         if (self.eos_id is not None and r.out and r.out[-1] == self.eos_id) \
                 or len(r.out) >= r.max_new or s.pos >= self.max_seq - 1:
-            r.done = True
+            self._finish(r, "done")
 
     def _append_token(self, i: int, tok: int, out: Dict[int, int]):
         s = self.slots[i]
@@ -989,17 +1290,36 @@ class ServeEngine:
         A slot that went inactive mid-block (EOS hit, or ``rem`` budget
         drained) emits the -1 sentinel for its remaining steps — its column
         is truncated at the sentinel, so the slot is credited exactly the
-        tokens the per-token oracle would have produced before stopping."""
+        tokens the per-token oracle would have produced before stopping.
+        The -2 quarantine sentinel (``nan_guard``) truncates the same way
+        but marks the request ``failed``: the tokens before it are healthy
+        and kept, everything at and after the poisoned step is discarded.
+
+        A row whose request is already terminal (cancelled / expired /
+        failed / finished by an earlier block) is skipped outright — late
+        tokens from a deferred block are never credited past a terminal
+        transition, so a cancelled slot can't leak a speculative block's
+        tokens into its stream (or its successor's: the successor has a
+        different uid and its own column)."""
         out: Dict[int, List[int]] = {}
         for i in live:
             s = self.slots[i]
+            if s.req.done:
+                continue
             toks_i = block[:t_block, i].tolist()
-            if -1 in toks_i:
-                toks_i = toks_i[:toks_i.index(-1)]
+            quarantined = False
+            for j, t in enumerate(toks_i):
+                if t < 0:
+                    quarantined = (t == model_lib.QUARANTINE_SENTINEL)
+                    toks_i = toks_i[:j]
+                    break
             s.req.out.extend(toks_i)
             s.pos += len(toks_i)
             out[s.req.uid] = toks_i
-            self._finish_check(s)
+            if quarantined:
+                self._finish(s.req, "failed")
+            else:
+                self._finish_check(s)
         return out
 
     def _sampling_arrays(self, live: List[int]):
@@ -1035,8 +1355,16 @@ class ServeEngine:
         Any async in-flight block is flushed first (its tokens are credited
         to the requests but not returned here — this call's return is this
         step's tokens only).
+
+        Failure semantics match the fused path: deadlines are expired at
+        the top of the step and, under ``nan_guard``, a row whose logits
+        go non-finite is marked ``failed`` with no token emitted (the
+        host-side twin of the fused block's -2 sentinel — the oracle must
+        implement the same state machine the chaos suite compares against).
         """
         self.flush()
+        self._expire_deadlines()
+        self._maybe_demote()
         self._admit()
         self._advance_prefill()
         live = self._live()
@@ -1047,16 +1375,22 @@ class ServeEngine:
         logits, self.state = self._decode(
             self._tier_params[self._block_tier(live)], toks, self.state,
             pos, self._live_mask(live))
+        lg = logits[:, 0, :]
+        finite = (np.asarray(jnp.all(jnp.isfinite(lg), axis=-1))
+                  if self.nan_guard else None)
         samp = self._sampling_arrays(live)
         if samp is None:
-            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+            nxt = np.asarray(jnp.argmax(lg, axis=-1))
         else:
             temp, topk, seeds = samp
             nxt = np.asarray(model_lib.sample_tokens(
-                logits[:, 0, :], jnp.asarray(temp), jnp.asarray(topk),
+                lg, jnp.asarray(temp), jnp.asarray(topk),
                 jnp.asarray(seeds), jnp.asarray(pos)))
         out: Dict[int, int] = {}
         for i in live:
+            if finite is not None and not finite[i]:
+                self._finish(self.slots[i].req, "failed")
+                continue
             self._append_token(i, int(nxt[i]), out)
         return out
 
@@ -1196,6 +1530,19 @@ class ServeEngine:
         uid_slot = {self.slots[i].req.uid: i for i in blk.live}
         credited = self._append_block(blk.live, np.asarray(blk.block),
                                       blk.t_block)
+        # service-rate EMA (seconds per credited token) between accounted
+        # blocks — the deadline-pressure demotion trigger's estimate.  A
+        # deterministic VirtualClock that never advances keeps this None/0,
+        # so fault tests stay clock-exact.
+        now = self._clock()
+        n_tok = sum(len(t) for t in credited.values())
+        if self._last_account is not None and n_tok:
+            dt = now - self._last_account
+            if dt > 0:
+                per = dt / n_tok
+                self._tok_ema = (per if self._tok_ema is None
+                                 else 0.8 * self._tok_ema + 0.2 * per)
+        self._last_account = now
         if blk.spec_k:
             # acceptance accounting: a row emitting n >= 1 tokens accepted
             # n-1 of its spec_k drafts (the last emit is the verify tier's
@@ -1223,7 +1570,12 @@ class ServeEngine:
         {uid: [tokens]} they produced (empty when nothing was pending).
         Call before inspecting request/slot state mid-traffic; the drain
         loops, ``step()``, ``warmup()`` and ``maybe_recalibrate()`` flush
-        on their own."""
+        on their own.
+
+        Safe and idempotent in every engine state: on a fresh engine that
+        never dispatched, after a drain, or called repeatedly, it is a
+        {}-returning no-op (regression-tested — see
+        tests/test_fault_tolerance.py)."""
         out: Dict[int, List[int]] = {}
         while self._inflight:
             self._account_one(out)
@@ -1294,6 +1646,12 @@ class ServeEngine:
         """
         budget = max(1, self.decode_block if n_steps is None else n_steps)
         out: Dict[int, List[int]] = {}
+        # failure-path bookkeeping runs first: expiring a request here
+        # drops it out of _live(), which invalidates the carry key below —
+        # the expired row is never speculated over, and its in-flight
+        # tokens are discarded at sync (never credited past terminal)
+        self._expire_deadlines()
+        self._maybe_demote()
         launched = False
         if self.async_dispatch and self._inflight:
             live = self._live()
@@ -1369,6 +1727,8 @@ class ServeEngine:
         results: Dict[int, List[int]] = {}
         steps = 0
         while True:
+            self._expire_deadlines()
+            self._maybe_demote()
             if not self._inflight:
                 # capture already-finished slots before admission
                 # overwrites them (requests can finish in

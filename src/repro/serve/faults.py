@@ -1,0 +1,212 @@
+"""Deterministic fault injection for the serving engine (ISSUE 10).
+
+Chaos testing for a serving stack is only useful when a failing schedule
+can be replayed exactly, so everything here is deterministic: faults fire
+at engine *ticks* (one ``decode_block_step`` call = one tick), never at
+wall-clock times, and time itself is injectable — ``VirtualClock`` is an
+engine clock that advances only when told to, so deadline expiry becomes
+a scheduled event instead of a race.
+
+Fault kinds (``Fault.kind``):
+
+* ``"nan"`` — corrupt one request's decode-state row to NaN
+  (``poison_slot_state``).  The next block dispatched for that slot
+  produces non-finite logits, the on-device ``nan_guard`` emits the -2
+  quarantine sentinel for that row only, and the host marks the request
+  ``failed``.  Applied only while the target is decode-live (a queued or
+  mid-prefill target defers the fault to a later tick; a terminal target
+  drops it); the target needs >= 1 cached prefix position — i.e. a prompt
+  of >= 2 tokens — for the poison to reach attention.
+* ``"cancel"`` — ``engine.cancel(uid)``: exercises mid-queue, mid-prefill
+  and mid-decode (including mid-speculation: the injector runs before the
+  tick's launch, so an in-flight verify block may be pending) paths.
+* ``"delay"`` — advance the injector's ``VirtualClock`` by ``dt`` seconds:
+  a stalled block / host hiccup, the deterministic trigger for deadline
+  expiry and demotion pressure.
+* ``"recalibrate"`` — force ``engine.maybe_recalibrate`` (threshold -1, so
+  any measured density trips it) at an adversarial tick, mid-traffic.
+
+The injector never reaches around the engine's public failure machinery:
+``"nan"`` perturbs device state exactly like real numerical corruption
+would and everything else goes through engine APIs, so a chaos run
+exercises the same code paths production faults do.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault: ``kind`` fires at engine tick ``tick``.
+
+    ``uid`` targets a request (``nan`` / ``cancel``); ``dt`` is the clock
+    advance in seconds (``delay``)."""
+    tick: int
+    kind: str                     # "nan" | "cancel" | "delay" | "recalibrate"
+    uid: Optional[int] = None
+    dt: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("nan", "cancel", "delay", "recalibrate"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind in ("nan", "cancel") and self.uid is None:
+            raise ValueError(f"{self.kind!r} fault needs a target uid")
+
+
+class VirtualClock:
+    """Deterministic engine clock: ``clock()`` returns a value that only
+    moves when ``advance()`` is called (typically by a ``delay`` fault).
+    Pass as ``ServeEngine(clock=...)`` so deadlines and demotion pressure
+    are functions of the fault schedule, not of host speed."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        self.now += float(dt)
+        return self.now
+
+
+def poison_slot_state(engine, slot: int):
+    """Overwrite slot ``slot``'s decode-state row with NaN across every
+    floating-point state leaf (every per-layer leaf carries batch at axis
+    1: (L, B, ...)).  Row-local by construction — attention/recurrence
+    read per-row state — so only this slot's logits go non-finite.  Under
+    async dispatch the poison lands on the *next dispatched* block (an
+    already in-flight block computed from the pre-poison state stays
+    clean), which is exactly the one-block-late discovery the quarantine
+    sentinel handles."""
+    n = engine.n_slots
+
+    def rot(a):
+        if (hasattr(a, "ndim") and a.ndim >= 2 and a.shape[1] == n
+                and jnp.issubdtype(a.dtype, jnp.floating)):
+            return a.at[:, slot].set(jnp.nan)
+        return a
+
+    engine.state = jax.tree.map(rot, engine.state)
+
+
+class FaultInjector:
+    """Applies a schedule of ``Fault``s to a ``ServeEngine`` tick by tick.
+
+    Call ``apply(engine, tick)`` once per tick *before* the engine's
+    ``decode_block_step``.  Faults due at or before ``tick`` fire in
+    schedule order; a ``nan`` fault whose target is not decode-live yet is
+    deferred to the next tick (recorded once it lands), and a fault whose
+    target is already terminal is dropped (recorded in ``dropped``).  The
+    bookkeeping makes the chaos suite's accounting assertable: every
+    applied fault maps to exactly one terminal
+    ``failed`` / ``cancelled`` / ``deadline_missed`` request.
+    """
+
+    def __init__(self, faults: Sequence[Fault], *,
+                 clock: Optional[VirtualClock] = None):
+        self.pending: List[Fault] = sorted(faults, key=lambda f: f.tick)
+        self.clock = clock
+        self.applied: List[Tuple[int, Fault]] = []
+        self.dropped: List[Fault] = []
+
+    def apply(self, engine, tick: int) -> List[Fault]:
+        """Fire every due fault; returns the ones applied this call."""
+        fired: List[Fault] = []
+        still: List[Fault] = []
+        for f in self.pending:
+            if f.tick > tick:
+                still.append(f)
+                continue
+            verdict = self._apply_one(engine, f)
+            if verdict == "applied":
+                self.applied.append((tick, f))
+                fired.append(f)
+            elif verdict == "defer":
+                still.append(f)
+            else:
+                self.dropped.append(f)
+        self.pending = still
+        return fired
+
+    def _apply_one(self, engine, f: Fault) -> str:
+        if f.kind == "delay":
+            if self.clock is None:
+                return "drop"
+            self.clock.advance(f.dt)
+            return "applied"
+        if f.kind == "recalibrate":
+            if engine.exec_cfg is None or engine._stats is None:
+                return "drop"
+            engine.maybe_recalibrate(drift_threshold=-1.0)
+            return "applied"
+        status = engine.status(f.uid)
+        if status is None or status in ("done", "cancelled",
+                                        "deadline_missed", "failed", "shed"):
+            return "drop"
+        if f.kind == "cancel":
+            return "applied" if engine.cancel(f.uid) else "drop"
+        # "nan": needs the target decode-live so the poisoned row is the
+        # one its next block reads
+        for i in engine._live():
+            if engine.slots[i].req.uid == f.uid:
+                poison_slot_state(engine, i)
+                return "applied"
+        return "defer"
+
+
+def drive(engine, injector: Optional[FaultInjector] = None, *,
+          on_tick: Optional[Callable[[int], object]] = None,
+          max_ticks: int = 2000) -> int:
+    """Deterministic serving loop for chaos runs: each tick runs the
+    arrival hook (``on_tick(tick)`` — submit requests here; return truthy
+    while later arrivals are still pending so an early drain doesn't end
+    the run before they land), fires due faults, then one
+    ``decode_block_step``.  Stops when no arrivals are pending and the
+    engine is fully drained (queue empty, all slots terminal, nothing in
+    flight — a final ``flush()`` credits the deferred tail) and returns
+    the tick count.  Raises ``RuntimeError`` past ``max_ticks`` — the
+    chaos suite's hang guard."""
+    for tick in range(max_ticks):
+        arrivals_pending = False
+        if on_tick is not None:
+            arrivals_pending = bool(on_tick(tick))
+        if injector is not None:
+            injector.apply(engine, tick)
+        engine.decode_block_step()
+        if not arrivals_pending and engine._drained():
+            engine.flush()
+            if engine._drained() and not engine._inflight:
+                return tick + 1
+    raise RuntimeError(f"engine did not drain within {max_ticks} ticks "
+                       f"(queue={len(engine.queue)}, "
+                       f"inflight={len(engine._inflight)})")
+
+
+def random_schedule(seed: int, uids: Sequence[int], n_ticks: int, *,
+                    kinds: Sequence[str] = ("nan", "cancel", "delay"),
+                    n_faults: int = 3, delay_dt: float = 1.0) -> List[Fault]:
+    """Seeded random fault schedule over ``uids`` within ``n_ticks`` —
+    same (seed, uids, n_ticks) in, same schedule out.  At most one fault
+    per target uid so the fault -> terminal-request mapping stays
+    one-to-one."""
+    rng = np.random.default_rng(seed)
+    uids = list(uids)
+    faults: List[Fault] = []
+    targets = rng.permutation(len(uids))[:max(n_faults, 0)]
+    for t in targets:
+        kind = str(kinds[int(rng.integers(len(kinds)))])
+        tick = int(rng.integers(1, max(n_ticks, 2)))
+        if kind == "delay":
+            faults.append(Fault(tick=tick, kind="delay", dt=delay_dt))
+        elif kind == "recalibrate":
+            faults.append(Fault(tick=tick, kind="recalibrate"))
+        else:
+            faults.append(Fault(tick=tick, kind=kind, uid=uids[int(t)]))
+    return faults

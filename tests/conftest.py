@@ -6,10 +6,19 @@ real package, so property-test modules import ``given / settings /
 strategies`` from here.  When hypothesis *is* installed it is re-exported
 unchanged; otherwise a deterministic seeded-numpy sampler with the same
 decorator surface runs each property ``max_examples`` times.
+
+And a per-test timeout shim in the same spirit: ``pytest-timeout`` cannot
+be pip-installed here, so a SIGALRM itimer around each test call phase
+turns a hung async drain into a failing test instead of a wedged lane.
+Default 600 s, overridable per test with ``@pytest.mark.timeout(N)`` or
+globally via ``PYTEST_PER_TEST_TIMEOUT`` (0 disables).  POSIX main-thread
+only — elsewhere it degrades to a no-op, never a false failure.
 """
 import os
+import signal
 import subprocess
 import sys
+import threading
 import zlib
 
 import numpy as np
@@ -22,6 +31,38 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: heavy model/system tests excluded from the fast "
         "CI lane (run with -m slow or no marker filter)")
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test wall-clock limit enforced by "
+        "the conftest SIGALRM shim (default from PYTEST_PER_TEST_TIMEOUT, "
+        "600 s)")
+
+
+_DEFAULT_TIMEOUT = float(os.environ.get("PYTEST_PER_TEST_TIMEOUT", "600"))
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    seconds = float(marker.args[0]) if marker and marker.args \
+        else _DEFAULT_TIMEOUT
+    can_alarm = (seconds > 0 and hasattr(signal, "SIGALRM")
+                 and threading.current_thread() is threading.main_thread())
+    if not can_alarm:
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded the per-test timeout of {seconds:g}s "
+            f"(conftest SIGALRM shim; raise with @pytest.mark.timeout)")
+
+    prev = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, prev)
 
 
 @pytest.fixture

@@ -46,6 +46,7 @@ SECTIONS_BY_PR = {
     ],
     8: ["quantized_engine"],
     9: ["speculative_engine"],
+    10: ["serve_load_faults"],
 }
 
 
